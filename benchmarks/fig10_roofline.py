@@ -1,0 +1,102 @@
+"""Paper Fig. 10: roofline sweep of tiled matrix multiplication.
+
+Tiled matmuls (tile m=n=k swept) stream A/B in and O out over the 512-bit
+AXI DMA; arithmetic intensity rises with tile size.  Two execution models:
+  * SNAX hybrid coupling — DMA overlapped with compute (async control,
+    double-buffered SPM): per-tile time = max(compute, streamers, DMA)
+  * conventional C-runtime — DMA serializes with compute, CSR setup exposed
+
+Reported per tile size: ops/byte, achieved vs roofline-attainable
+throughput, utilization.  The paper's headline points: 92% PE utilization
+compute-bound, ~79% of AXI bandwidth-bound, 78% at the ridge.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.costmodel import ClusterHw
+from repro.core.presets import gemm_accelerator
+
+
+AXI_EFF = 0.85      # 2D-strided AXI burst efficiency (non-ideal bursts)
+DRAIN_BUBBLE = 2    # cycles per 8x8 output block: accumulator drain +
+                    # double-buffered streamer re-config hand-off
+
+
+def _tile_cycles(t: int, hw: ClusterHw, accel, overlap: bool):
+    """Cycles for one t x t x t tile (int8 in, int32 partials back).
+
+    The datapath processes an 8x8x8 MAC cube per cycle; every 8x8 output
+    block additionally pays ``DRAIN_BUBBLE`` cycles (writeback through the
+    2048-bit O port + CSR double-buffer switch), which is what keeps real
+    PE utilization near the paper's 92% instead of 100%.
+    """
+    inner = (t // 8) ** 3                        # MAC cycles
+    compute = inner + DRAIN_BUBBLE * (t // 8) ** 2
+    # streamers: A, B int8 (t*t each), O int32 writeback
+    sa = accel.streamers[0]
+    so = accel.streamers[2]
+    stream = max(
+        sa.stream_cycles(math.ceil(t * t / max(sa.block_shape[0] *
+                                               sa.block_shape[1], 1))),
+        so.stream_cycles(math.ceil(t * t / max(so.block_shape[0] *
+                                               so.block_shape[1], 1))),
+    )
+    dma_bytes = 2 * t * t + 4 * t * t            # A+B in, O out
+    dma = math.ceil(hw.dma_cycles(dma_bytes) / AXI_EFF)
+    csr = accel.csr_setup_cycles
+    if overlap:
+        # double buffering hides the smaller of (compute, dma); the fill/
+        # drain of the overlap pipeline exposes one barrier per tile
+        return (max(compute, stream, dma) + hw.barrier_cycles, compute,
+                dma_bytes)
+    return compute + stream + dma + csr + hw.barrier_cycles, compute, \
+        dma_bytes
+
+
+def run(verbose=True):
+    hw = ClusterHw()
+    accel = gemm_accelerator()
+    peak_macs_per_cycle = accel.cost.ops_per_cycle           # 512
+    axi_bytes_per_cycle = hw.dma_bytes_per_cycle             # 64
+    ridge = peak_macs_per_cycle / axi_bytes_per_cycle        # ops/byte
+
+    rows = []
+    for t in (8, 16, 32, 64, 128, 256, 512):
+        total_cyc, compute_cyc, dma_bytes = _tile_cycles(
+            t, hw, accel, overlap=True)
+        seq_cyc, _, _ = _tile_cycles(t, hw, accel, overlap=False)
+        macs = t ** 3
+        ai = macs / dma_bytes
+        attainable = min(peak_macs_per_cycle, ai * axi_bytes_per_cycle)
+        achieved = macs / total_cyc
+        achieved_seq = macs / seq_cyc
+        rows.append({
+            "tile": t,
+            "ops_per_byte": round(ai, 2),
+            "achieved_macs_per_cycle": round(achieved, 1),
+            "attainable": round(attainable, 1),
+            "util_vs_roofline_pct": round(100 * achieved / attainable, 1),
+            "c_runtime_util_pct": round(100 * achieved_seq / attainable,
+                                        1),
+            "regime": ("bandwidth" if ai < ridge * 0.9 else
+                       "ridge" if ai < ridge * 1.5 else "compute"),
+        })
+    if verbose:
+        print("\n== Fig. 10: tiled-matmul roofline sweep "
+              f"(ridge @ {ridge:.0f} ops/B) ==")
+        print(f"  {'tile':>5} {'ops/B':>7} {'ach':>7} {'attain':>7} "
+              f"{'SNAX%':>6} {'C-rt%':>6}  regime")
+        for r in rows:
+            print(f"  {r['tile']:>5} {r['ops_per_byte']:>7} "
+                  f"{r['achieved_macs_per_cycle']:>7} "
+                  f"{r['attainable']:>7} "
+                  f"{r['util_vs_roofline_pct']:>6} "
+                  f"{r['c_runtime_util_pct']:>6}  {r['regime']}")
+        print("  paper: 92% PE util compute-bound, 79% of BW "
+              "bandwidth-bound, 78% at ridge")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

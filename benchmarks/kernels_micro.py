@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: wall time of the jitted public ops on this
+host (interpret-mode Pallas on CPU — correctness-path timing, the TPU
+numbers come from the dry-run roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gemm.ref import matmul_ref
+from repro.kernels.maxpool.ref import maxpool2d_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _time(fn, *args, reps=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(verbose=True):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    a = jax.random.normal(key, (512, 512), jnp.float32)
+    rows.append(("gemm_ref_512", _time(jax.jit(matmul_ref), a, a)))
+    x4 = jax.random.normal(key, (8, 32, 32, 128))
+    rows.append(("maxpool_ref", _time(jax.jit(maxpool2d_ref), x4)))
+    q = jax.random.normal(key, (2, 8, 256, 64))
+    rows.append(("attention_ref_256", _time(
+        jax.jit(lambda q: attention_ref(q, q, q)), q)))
+    xr = jax.random.normal(key, (1024, 1024))
+    w = jnp.ones((1024,))
+    rows.append(("rmsnorm_ref_1k", _time(jax.jit(rmsnorm_ref), xr, w)))
+    if verbose:
+        for name, us in rows:
+            print(f"{name},{us:.1f},")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

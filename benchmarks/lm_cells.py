@@ -1,0 +1,55 @@
+"""Roofline table over the 40 (arch x shape) cells from the dry-run JSONs.
+
+Reads benchmarks/results/dryrun_{single,multi}.json (produced by
+``python -m repro.launch.dryrun --all [--multi-pod] --out ...``) and renders
+the EXPERIMENTS.md SSRoofline table.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "results")
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r) -> str:
+    if r.get("status") == "skip":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                f"| skipped (full attention @512k) |")
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                f"| FAILED |")
+    c, m, k = r["compute_s"], r["memory_s"], r["collective_s"]
+    uf = r.get("useful_frac")
+    mfu = r.get("mfu_opt")
+    return ("| {arch} | {shape} | {mesh} | {c:.1f} | {m:.1f} | {k:.1f} "
+            "| {dom}-bound, useful={uf}, MFU*={mfu} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=c * 1e3, m=m * 1e3, k=k * 1e3, dom=r["dominant"],
+        uf=f"{uf:.2f}" if uf else "n/a",
+        mfu=f"{mfu:.2%}" if mfu else "n/a")
+
+
+def run(verbose=True):
+    rows = load("dryrun_single.json") + load("dryrun_multi.json")
+    if verbose and rows:
+        print("\n== LM cells roofline (terms in ms) ==")
+        print("| arch | shape | mesh | compute | memory | collective "
+              "| verdict |")
+        print("|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(fmt_row(r))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "results")
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    return json.load(open(path)) if os.path.exists(path) else []
+
+
+def _ms(x):
+    return f"{x * 1e3:.1f}"
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | useful | MFU* | peak GB/dev |",
+           "|---|---|---:|---:|---:|---|---:|---:|---:|"]
+    for r in rows:
+        if r.get("status") == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped: long_500k needs sub-quadratic attention "
+                       f"| — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"FAILED | — | — | — |")
+            continue
+        uf = r.get("useful_frac")
+        mfu = r.get("mfu_opt")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_ms(r['compute_s'])} | "
+            f"{_ms(r['memory_s'])} | {_ms(r['collective_s'])} | "
+            f"{r['dominant']} | "
+            + (f"{uf:.2f}" if uf else "n/a") + " | "
+            + (f"{mfu:.1%}" if mfu else "n/a") + " | "
+            + f"{r.get('peak_mem_gb', 0):.1f} |")
+    return "\n".join(out)
+
+
+def compile_table(rows):
+    ok = [r for r in rows if r.get("status") == "ok"]
+    sk = [r for r in rows if r.get("status") == "skip"]
+    return (f"{len(ok)} cells compiled OK, {len(sk)} skipped by design, "
+            f"{len(rows) - len(ok) - len(sk)} failed")
+
+
+def main():
+    single = load("dryrun_single.json")
+    multi = load("dryrun_multi.json")
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(compile_table(single), "\n")
+    print(roofline_table(single))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(compile_table(multi))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness: one function per paper table/figure.
+
+  fig8   — heterogeneous acceleration ladder (paper Fig. 8)
+  fig10  — tiled-matmul roofline sweep (paper Fig. 10)
+  table1 — end-to-end TinyML latency (paper Table I)
+  cells  — 40-cell LM roofline table (from the dry-run artifacts)
+  micro  — kernel micro timings (CSV: name,us_per_call,derived)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import fig8_heterogeneous, fig10_roofline, \
+        kernels_micro, lm_cells, table1_e2e
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    print("name,us_per_call,derived")
+    if which in ("all", "fig8"):
+        rows = fig8_heterogeneous.run()
+        for r in rows:
+            print(f"fig8.{r['config']},{r['wall_us_jax']},"
+                  f"total_speedup={r['total_speedup']}x;"
+                  f"util={r['sys_util_pct']}%")
+    if which in ("all", "fig10"):
+        rows = fig10_roofline.run()
+        for r in rows:
+            print(f"fig10.tile{r['tile']},,"
+                  f"util={r['util_vs_roofline_pct']}%;"
+                  f"c_runtime={r['c_runtime_util_pct']}%")
+    if which in ("all", "table1"):
+        rows = table1_e2e.run()
+        for r in rows:
+            print(f"table1.{r['workload']},"
+                  f"{r['modeled_ms'] * 1e3},paper={r['paper_ms']}ms")
+    if which in ("all", "cells"):
+        lm_cells.run(verbose=which == "cells")
+    if which in ("all", "micro"):
+        for name, us in kernels_micro.run(verbose=False):
+            print(f"micro.{name},{us:.1f},")
+
+
+if __name__ == "__main__":
+    main()

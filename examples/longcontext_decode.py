@@ -1,0 +1,55 @@
+"""Long-context decoding with O(1) state: the `long_500k` capability at
+CPU-demo scale.
+
+zamba2 (Mamba2 + sliding-window shared attention) decodes far past its
+attention window with constant memory: SSM state carries the long-range
+signal, the ring KV buffer holds only the window. The same loop at
+production scale is the `long_500k` dry-run cell (seq 524,288, batch 1).
+
+Run:  PYTHONPATH=src python examples/longcontext_decode.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs.base import reduce
+from repro.models import lm
+
+
+def main():
+    cfg = reduce(configs.get("zamba2_2_7b"))
+    window = 16
+    cfg = dataclasses.replace(cfg, sliding_window=window)
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    total = 256                      # "long" context, 16x the window
+    caches = lm.init_caches(cfg, 1, total)
+    assert caches["attn"]["k"].shape[2] == window, "ring buffer != window"
+
+    state_bytes = sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(caches))
+    print(f"decode state: {state_bytes/1024:.1f} KiB total "
+          f"(constant in context length; a dense-KV arch would grow "
+          f"linearly to {total}x per-token cost)")
+
+    step = jax.jit(lambda p, t, c: lm.decode_step(p, t, c, cfg),
+                   donate_argnums=(2,))
+    tok = jnp.zeros((1, 1), jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(total):
+        logits, caches = step(params, tok, caches)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        if (i + 1) % 64 == 0:
+            jax.block_until_ready(logits)
+            dt = (time.perf_counter() - t0) / (i + 1) * 1e3
+            print(f"  token {i+1:4d}/{total}  {dt:6.2f} ms/token "
+                  f"(flat — no KV growth)")
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests: continuous slot-pool decoding
+through ``repro.launch.serve.Server`` (admit -> lockstep decode -> retire).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(["--arch", "smollm_135m", "--reduced", "--batch", "4",
+                   "--prompt-len", "8", "--gen", "16",
+                   "--requests", "6", *sys.argv[1:]]))

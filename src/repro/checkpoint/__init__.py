@@ -1,0 +1,6 @@
+from repro.checkpoint.ckpt import (
+    latest_step, load_checkpoint, save_checkpoint, AsyncCheckpointer,
+)
+
+__all__ = ["latest_step", "load_checkpoint", "save_checkpoint",
+           "AsyncCheckpointer"]

@@ -1,0 +1,40 @@
+"""Architecture registry: ``get("<arch-id>")`` resolves ``--arch`` ids."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCfg, reduce
+
+ARCH_IDS = (
+    "qwen2_5_14b", "stablelm_3b", "yi_34b", "smollm_135m", "zamba2_2_7b",
+    "qwen2_vl_7b", "whisper_large_v3", "qwen2_moe_a2_7b",
+    "moonshot_v1_16b_a3b", "xlstm_350m", "snax_tinyml",
+)
+
+_ALIASES = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "stablelm-3b": "stablelm_3b",
+    "yi-34b": "yi_34b",
+    "smollm-135m": "smollm_135m",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "xlstm-350m": "xlstm_350m",
+}
+
+
+def get(arch_id: str) -> ArchConfig:
+    mod_name = _ALIASES.get(arch_id, arch_id.replace("-", "_").replace(
+        ".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_lm_archs() -> list[str]:
+    return [a for a in ARCH_IDS if a != "snax_tinyml"]
+
+
+__all__ = ["get", "all_lm_archs", "ARCH_IDS", "ArchConfig", "SHAPES",
+           "ShapeCfg", "reduce"]

@@ -1,0 +1,161 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is an ``ArchConfig`` in ``repro/configs/<id>.py``;
+``repro.configs.registry`` resolves ``--arch <id>``.  ``reduce()`` produces
+the CPU-smoke-test variant of any config (same family/block pattern, tiny
+dims).  ``SHAPES`` defines the four assigned input-shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = [
+    "ArchConfig", "MoeCfg", "SsmCfg", "XlstmCfg", "EncDecCfg",
+    "ShapeCfg", "SHAPES", "reduce",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeCfg:
+    n_routed: int
+    top_k: int
+    n_shared: int
+    d_expert: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    # >1: dispatch (cumsum/scatter) runs independently per token group with
+    # per-group capacity — groups align with the data-parallel shards so the
+    # dispatch never crosses devices (the MoE collective hillclimb)
+    local_groups: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmCfg:
+    """Mamba2 (SSD) block parameters."""
+    state: int = 64
+    conv: int = 4
+    expand: int = 2
+    head_p: int = 64            # SSD head dim P
+    chunk: int = 128
+    # hybrid (zamba2): a *shared* attention+FFN block (one set of weights,
+    # reused) runs after every ``shared_attn_every`` mamba blocks.
+    shared_attn_every: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmCfg:
+    pattern: tuple[str, ...] = ("mlstm", "slstm")   # repeated over layers
+    n_heads: int = 4
+    chunk: int = 64
+    proj_factor: float = 2.0    # mLSTM up-projection
+    ff_factor: float = 1.333    # sLSTM post-FFN factor
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecCfg:
+    n_enc_layers: int
+    n_dec_layers: int
+    # decoder/encoder seq split for a shape cell: enc gets ``seq``, dec gets
+    # ``seq // dec_ratio`` tokens (whisper: 4 frames-per-token is typical).
+    dec_ratio: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Literal["dense", "moe", "hybrid", "ssm", "audio", "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    norm: Literal["rms", "ln"] = "rms"
+    act: Literal["swiglu", "gelu"] = "swiglu"
+    rope_theta: float = 1_000_000.0
+    rotary_pct: float = 1.0
+    use_rope: bool = True
+    tie_embeddings: bool = False
+    moe: MoeCfg | None = None
+    ssm: SsmCfg | None = None
+    xlstm: XlstmCfg | None = None
+    encdec: EncDecCfg | None = None
+    mrope_sections: tuple[int, int, int] | None = None   # qwen2-vl
+    n_patches: int = 0           # vlm: patch embeddings per sample
+    sliding_window: int | None = None    # long-context attention window
+    kv_quant: bool = False       # int8 KV cache (serving memory-term win)
+    subquadratic: bool = False   # eligible for the long_500k cell
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6*N*D model flops)."""
+        from repro.models.lm import count_params
+        return count_params(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.lm import count_params
+        return count_params(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduce(cfg: ArchConfig) -> ArchConfig:
+    """Tiny same-family variant for CPU smoke tests (one fwd/train step)."""
+    changes: dict = dict(
+        n_layers=min(cfg.n_layers, 2),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=128,
+        head_dim=16,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+    )
+    if cfg.moe:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, n_routed=8, top_k=2, n_shared=min(cfg.moe.n_shared, 2),
+            d_expert=32,
+        )
+    if cfg.ssm:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, state=16, head_p=16, chunk=16,
+            shared_attn_every=min(cfg.ssm.shared_attn_every, 2)
+            if cfg.ssm.shared_attn_every else 0,
+        )
+        changes["n_layers"] = 4 if cfg.ssm.shared_attn_every else 2
+    if cfg.xlstm:
+        changes["xlstm"] = dataclasses.replace(cfg.xlstm, n_heads=2, chunk=8)
+        changes["n_layers"] = len(cfg.xlstm.pattern)
+    if cfg.encdec:
+        changes["encdec"] = dataclasses.replace(
+            cfg.encdec, n_enc_layers=2, n_dec_layers=2)
+    if cfg.mrope_sections:
+        # head_dim 16 -> rotary half 8 = 2 + 3 + 3 sections
+        changes["mrope_sections"] = (2, 3, 3)
+        changes["n_patches"] = 8
+    return dataclasses.replace(cfg, **changes)

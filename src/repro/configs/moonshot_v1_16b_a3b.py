@@ -1,0 +1,12 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d_model=2048 16H (kv=16) d_expert=1408,
+64 routed experts top-6 (+2 shared per the public moonlight config).
+vocab=163840. 64 experts % 16 == 0 -> true expert parallelism on the model
+axis. [hf:moonshotai/Moonlight-16B-A3B]"""
+from repro.configs.base import ArchConfig, MoeCfg
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab_size=163840,
+    moe=MoeCfg(n_routed=64, top_k=6, n_shared=2, d_expert=1408),
+)

@@ -1,0 +1,13 @@
+"""qwen2-vl-7b [vlm]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064 — M-RoPE (sections 16/24/24), dynamic-resolution patch
+frontend STUBBED: input_specs() supplies pre-merged patch embeddings.
+[arXiv:2409.12191]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+    vocab_size=152064, head_dim=128, qkv_bias=True,
+    mrope_sections=(16, 24, 24), n_patches=1024,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,9 @@
+"""smollm-135m [dense]: 30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152.
+llama-arch small, tied embeddings. [hf:HuggingFaceTB/SmolLM-135M]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-135m", family="dense",
+    n_layers=30, d_model=576, n_heads=9, n_kv_heads=3, d_ff=1536,
+    vocab_size=49152, tie_embeddings=True, rope_theta=10_000.0,
+)

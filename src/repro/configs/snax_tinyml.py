@@ -1,0 +1,6 @@
+"""The paper's own Fig. 6a TinyML workload (conv/maxpool/FC, int8) —
+routed through the SNAX core compiler, not the LM stack."""
+from repro.core.presets import tinyml_graph
+
+GRAPH = tinyml_graph()
+CONFIG = None  # not an LM arch; used by benchmarks/fig8 & examples

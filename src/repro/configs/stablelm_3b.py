@@ -1,0 +1,10 @@
+"""stablelm-3b [dense]: 32L d_model=2560 32H (kv=32) d_ff=6912 vocab=50304.
+LayerNorm + partial rotary (25%), per stablelm-2 family.
+[hf:stabilityai/stablelm-2-1_6b; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=6912,
+    vocab_size=50304, norm="ln", rotary_pct=0.25, rope_theta=10_000.0,
+)

@@ -1,0 +1,13 @@
+"""whisper-large-v3 [audio]: 32L enc + 32L dec, d_model=1280 20H (kv=20)
+d_ff=5120 vocab=51866 — enc-dec, GELU+LayerNorm, sinusoidal positions,
+conv frontend STUBBED (input_specs() supplies frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import ArchConfig, EncDecCfg
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3", family="audio",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, d_ff=5120,
+    vocab_size=51866, norm="ln", act="gelu", use_rope=False,
+    qkv_bias=True,
+    encdec=EncDecCfg(n_enc_layers=32, n_dec_layers=32, dec_ratio=4),
+)

@@ -1,0 +1,13 @@
+"""xlstm-350m [ssm]: 24L d_model=1024 4H, alternating mLSTM/sLSTM blocks,
+d_ff=0 (blocks carry internal up/down projections), vocab=50304.
+Recurrent O(1) decode state -> eligible for long_500k.
+[arXiv:2405.04517; unverified]"""
+from repro.configs.base import ArchConfig, XlstmCfg
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304, use_rope=False,
+    xlstm=XlstmCfg(pattern=("mlstm", "slstm"), n_heads=4, chunk=64),
+    subquadratic=True,
+)

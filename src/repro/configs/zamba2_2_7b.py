@@ -1,0 +1,14 @@
+"""zamba2-2.7b [hybrid]: 54L d_model=2560, Mamba2 (ssm_state=64) + ONE
+shared attention+FFN block (32H kv=32, d_ff=10240) reused every 6 layers.
+The shared block uses a 4096 sliding window in long-context serving so the
+KV cache stays O(window) -> eligible for long_500k. [arXiv:2411.15242]"""
+from repro.configs.base import ArchConfig, SsmCfg
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=10240,
+    vocab_size=32000,
+    ssm=SsmCfg(state=64, conv=4, expand=2, head_p=64, chunk=128,
+               shared_attn_every=6),
+    sliding_window=4096, subquadratic=True,
+)

@@ -1,0 +1,20 @@
+"""SNAX core: hybrid-coupled multi-accelerator cluster + compiler passes."""
+from repro.core.accelerator import AcceleratorSpec, Task, riscv_core_spec
+from repro.core.allocation import AllocationPlan, Buffer, allocate
+from repro.core.cluster import Cluster
+from repro.core.costmodel import AccelCost, ClusterHw, TpuV5e, node_cycles
+from repro.core.graph import Graph, OpNode, TensorSpec
+from repro.core.placement import place
+from repro.core.programming import emit
+from repro.core.schedule import ScheduleReport, StageTask, build_schedule
+from repro.core.streamer import LoopNest, Streamer
+
+__all__ = [
+    "AcceleratorSpec", "Task", "riscv_core_spec",
+    "AllocationPlan", "Buffer", "allocate",
+    "Cluster", "AccelCost", "ClusterHw", "TpuV5e", "node_cycles",
+    "Graph", "OpNode", "TensorSpec",
+    "place", "emit",
+    "ScheduleReport", "StageTask", "build_schedule",
+    "LoopNest", "Streamer",
+]

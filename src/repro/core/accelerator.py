@@ -1,0 +1,119 @@
+"""The SNAX uniform accelerator interface (hybrid coupling, SW side).
+
+Every accelerator in a SNAX cluster exposes
+  * a *loosely coupled control interface*: a flat CSR register space written
+    fire-and-forget by a management core.  Here: a flat ``dict[str, int]``
+    config (``csr``) validated against the accelerator's declared registers —
+    uniform across accelerators, only the register names/addresses differ
+    (paper SS IV-A).
+  * a *tightly coupled data interface*: a set of ``Streamer`` ports that
+    stream operand blocks from shared memory into the datapath (SS IV-B).
+
+``AcceleratorSpec`` is the design-time description (what the HW generator
+consumes); ``Task`` is a run-time configured unit of work (what the compiler
+schedules).  ``compute_fns`` maps kernel names to JAX callables — the
+"datapath" — so a cluster is extended by registering a new spec, exactly like
+dropping a new accelerator into the RTL template.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+from repro.core.costmodel import AccelCost, ClusterHw, node_cycles
+from repro.core.streamer import Streamer
+
+__all__ = ["AcceleratorSpec", "Task", "riscv_core_spec"]
+
+# compute_fn(attrs: dict, *inputs) -> output
+ComputeFn = Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorSpec:
+    """Design-time description of one accelerator."""
+
+    name: str
+    kernels: tuple[str, ...]                 # kernel types the datapath runs
+    compute_fns: Mapping[str, ComputeFn]
+    cost: AccelCost
+    streamers: tuple[Streamer, ...] = ()
+    csr_registers: tuple[str, ...] = ()      # legal CSR names
+    csr_setup_cycles: int = 24
+    csr_double_buffered: bool = True         # paper: setup hidden by dbuf
+
+    def supports(self, kernel: str) -> bool:
+        return kernel in self.kernels
+
+    def validate_csr(self, csr: Mapping[str, int]) -> None:
+        unknown = set(csr) - set(self.csr_registers)
+        if unknown:
+            raise KeyError(
+                f"{self.name}: unknown CSR register(s) {sorted(unknown)}; "
+                f"legal: {sorted(self.csr_registers)}"
+            )
+
+    @property
+    def vmem_bytes(self) -> int:
+        return sum(s.vmem_bytes for s in self.streamers)
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One configured, schedulable accelerator launch (fire-and-forget).
+
+    ``csr`` is the compute-kernel configuration; ``dataflow`` the per-port
+    streamer loop counters (the dataflow kernel) — the two-kernel split of
+    paper SS V (Device Programming).
+    """
+
+    accel: str
+    kernel: str
+    node: str                                 # graph node this realizes
+    csr: Mapping[str, int]
+    dataflow: Mapping[str, tuple[int, ...]]   # port -> loop bounds
+    n_ops: int                                # MAC/elem-op count
+    stream_bytes: int                         # total bytes through ports
+
+    def cycles(self, spec: AcceleratorSpec, hw: ClusterHw) -> dict[str, int]:
+        # port-bandwidth-limited streaming: widest-port assumption, all ports
+        # run concurrently, the slowest port bounds the datapath.
+        if spec.streamers:
+            per_port = []
+            for s in spec.streamers:
+                bounds = self.dataflow.get(s.name)
+                n_blocks = math.prod(bounds) if bounds else 0
+                per_port.append(s.stream_cycles(n_blocks))
+            stream = max(per_port) if per_port else 0
+        else:
+            # host core: data goes through the LSU, 8B/cycle
+            stream = math.ceil(self.stream_bytes / 8)
+        return node_cycles(
+            self.n_ops,
+            spec.cost,
+            stream,
+            spec.csr_setup_cycles,
+            csr_double_buffered=spec.csr_double_buffered,
+        )
+
+
+def riscv_core_spec(
+    fallback_fns: Mapping[str, ComputeFn], hw: ClusterHw
+) -> AcceleratorSpec:
+    """The management core as a catch-all 'accelerator'.
+
+    SNAX-MLIR places workload sections incompatible with every accelerator on
+    the RISC-V core itself (paper SS V, Device Placement) — modelled as an
+    accelerator that supports every kernel at scalar-core throughput.
+    """
+    return AcceleratorSpec(
+        name="riscv-core",
+        kernels=tuple(fallback_fns),
+        compute_fns=dict(fallback_fns),
+        cost=AccelCost(ops_per_cycle=hw.riscv_macs_per_cycle),
+        streamers=(),
+        csr_registers=(),
+        csr_setup_cycles=0,
+        csr_double_buffered=True,
+    )

@@ -1,0 +1,152 @@
+"""SNAX-MLIR pass 2: Static Memory Allocation.
+
+Buffers for producer-consumer pairs are planned in the shared SPM so data
+flows accelerator-to-accelerator without intermediate DMA; streamed buffers
+are double-buffered (odd/even pipeline cycles) when the schedule is
+pipelined (paper SS V).
+
+The unit of allocation is a *tile*: the DMA streams activation tiles in/out
+while weights stay resident.  Offsets are assigned greedily (first-fit on a
+free list); with steady-state pipelining every buffer is live for the whole
+program, so packing is exact, and the pass fails loudly if the plan exceeds
+the SPM — the same design-time feedback the RTL template gives.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cluster import Cluster
+from repro.core.graph import Graph
+
+__all__ = ["Buffer", "AllocationPlan", "allocate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Buffer:
+    value: str
+    offset: int
+    nbytes: int               # per buffer copy
+    copies: int               # 2 = double buffered
+    resident: bool            # weights: stay in SPM, no per-tile DMA
+
+    @property
+    def total_bytes(self) -> int:
+        return self.nbytes * self.copies
+
+
+@dataclasses.dataclass
+class AllocationPlan:
+    buffers: dict[str, Buffer]
+    spm_bytes: int
+    peak_bytes: int = 0          # high-water mark (reuse-aware)
+
+    @property
+    def used_bytes(self) -> int:
+        return self.peak_bytes or sum(
+            b.total_bytes for b in self.buffers.values())
+
+    def buffer(self, value: str) -> Buffer:
+        return self.buffers[value]
+
+
+def allocate(
+    graph: Graph,
+    cluster: Cluster,
+    *,
+    n_tiles: int,
+    streamed: tuple[str, ...],
+    pipelined: bool = True,
+    weight_streaming: bool = False,
+) -> AllocationPlan:
+    """Plan SPM buffers for a tiled execution of ``graph``.
+
+    ``streamed`` names the graph inputs that are tiled along dim 0 and moved
+    by DMA per tile (activations); all other graph inputs are weights —
+    resident by default, or (``weight_streaming``) staged layer-by-layer
+    through one shared arena sized for the largest weight (the paper's
+    MLPerf-Tiny autoencoder needs this: its dense weights exceed 128 kB).
+    """
+    streamed_set = set(streamed)
+    offset = 0
+    buffers: dict[str, Buffer] = {}
+
+    def add(value: str, nbytes: int, copies: int, resident: bool,
+            at: int | None = None) -> None:
+        nonlocal offset
+        # 64 B alignment: one TCDM superbank row / TPU lane-friendly.
+        aligned = -(-nbytes // 64) * 64
+        if at is not None:
+            buffers[value] = Buffer(value, at, 0, copies, resident)
+            return
+        buffers[value] = Buffer(value, offset, aligned, copies, resident)
+        offset += aligned * copies
+
+    weights = [n for n in graph.inputs if n not in streamed_set]
+    if weight_streaming and weights:
+        arena = max(graph.inputs[w].nbytes for w in weights)
+        add("__weight_arena__", arena, 1, resident=False)
+        arena_off = buffers["__weight_arena__"].offset
+    for name, spec in graph.inputs.items():
+        if name in streamed_set:
+            if spec.shape[0] % n_tiles:
+                raise ValueError(
+                    f"{name}: dim0 {spec.shape[0]} not divisible by "
+                    f"n_tiles={n_tiles}"
+                )
+            tile_bytes = spec.nbytes // n_tiles
+            add(name, tile_bytes, 2 if pipelined else 1, resident=False)
+        elif weight_streaming:
+            add(name, spec.nbytes, 1, resident=False, at=arena_off)
+        else:
+            add(name, spec.nbytes, 1, resident=True)
+
+    if pipelined:
+        # steady-state pipeline: every stage buffer is live simultaneously
+        # (odd/even double buffering), no reuse possible.
+        for node in graph.topo():
+            add(node.name, node.out.nbytes // n_tiles, 2, resident=False)
+    else:
+        # sequential: liveness-based first-fit reuse — a value's buffer is
+        # recycled after its last consumer (the paper's static-allocation
+        # pass exploits exactly this producer-consumer structure).
+        nodes = list(graph.topo())
+        last_use = {}
+        for idx, node in enumerate(nodes):
+            for v in node.inputs:
+                last_use[v] = idx
+        free: list[tuple[int, int]] = []         # (offset, nbytes)
+
+        def fit(nbytes: int) -> int:
+            nonlocal offset
+            for j, (foff, fsz) in enumerate(free):
+                if fsz >= nbytes:
+                    if fsz == nbytes:
+                        free.pop(j)
+                    else:
+                        free[j] = (foff + nbytes, fsz - nbytes)
+                    return foff
+            o = offset
+            offset += nbytes
+            return o
+
+        for idx, node in enumerate(nodes):
+            aligned = -(-(node.out.nbytes // n_tiles) // 64) * 64
+            buffers[node.name] = Buffer(node.name, fit(aligned), aligned,
+                                        1, resident=False)
+            for v in node.inputs:
+                if last_use.get(v) == idx and v in buffers \
+                        and not buffers[v].resident \
+                        and v not in graph.outputs:
+                    b = buffers[v]
+                    if b.nbytes:
+                        free.append((b.offset, b.nbytes))
+
+    plan = AllocationPlan(buffers, cluster.hw.spm_bytes,
+                          peak_bytes=offset)
+    if plan.used_bytes > cluster.hw.spm_bytes:
+        raise ValueError(
+            f"SPM overflow: plan needs {plan.used_bytes} B > "
+            f"{cluster.hw.spm_bytes} B; increase n_tiles (smaller tiles) or "
+            f"disable double buffering"
+        )
+    return plan

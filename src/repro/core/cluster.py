@@ -1,0 +1,54 @@
+"""SNAX multi-accelerator compute cluster (the HW template, SW-side model).
+
+A ``Cluster`` composes accelerators around a shared scratchpad (SPM) and a
+DMA engine, mirroring Fig. 4 of the paper.  Design-time customization —
+"attach accelerator to core", "adjust TCDM ports", "configure streamers" —
+is plain object composition here; the single-configuration-file flow of the
+paper maps to the preset builders in ``repro.core.presets``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.accelerator import AcceleratorSpec
+from repro.core.costmodel import ClusterHw
+
+__all__ = ["Cluster"]
+
+
+@dataclasses.dataclass
+class Cluster:
+    name: str
+    accelerators: list[AcceleratorSpec]
+    hw: ClusterHw = dataclasses.field(default_factory=ClusterHw)
+    # control mapping: management core -> accelerators it drives (paper 6c/6d
+    # show dedicated vs shared cores; shared cores serialize CSR writes but
+    # tasks still run asynchronously once launched).
+    core_map: dict[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def __post_init__(self):
+        names = [a.name for a in self.accelerators]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate accelerator names: {names}")
+        self.validate_spm()
+
+    def accel(self, name: str) -> AcceleratorSpec:
+        return next(a for a in self.accelerators if a.name == name)
+
+    def supporting(self, kernel: str) -> list[AcceleratorSpec]:
+        return [a for a in self.accelerators if a.supports(kernel)]
+
+    def validate_spm(self) -> None:
+        """Streamer FIFO footprints must fit the shared SPM budget."""
+        total = sum(a.vmem_bytes for a in self.accelerators)
+        if total > self.hw.spm_bytes:
+            raise ValueError(
+                f"{self.name}: streamer buffers ({total} B) exceed SPM "
+                f"({self.hw.spm_bytes} B)"
+            )
+
+    @property
+    def n_cores(self) -> int:
+        return max(1, len(self.core_map))

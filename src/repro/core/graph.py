@@ -1,0 +1,77 @@
+"""Workload graphs consumed by the SNAX-MLIR-style compiler passes.
+
+A ``Graph`` is a small, explicit SSA dataflow IR: named value tensors plus
+``OpNode``s with a *kernel type* (the unit of device placement).  This plays
+the role of the linalg-level MLIR the paper's compiler ingests from
+TensorFlow-Lite; the passes in ``placement.py`` / ``allocation.py`` /
+``schedule.py`` / ``programming.py`` mirror the four SNAX-MLIR concepts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterable
+
+import numpy as np
+
+__all__ = ["TensorSpec", "OpNode", "Graph"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    shape: tuple[int, ...]
+    dtype: str = "int8"
+
+    @property
+    def nbytes(self) -> int:
+        return math.prod(self.shape) * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class OpNode:
+    name: str
+    kernel: str                       # "matmul" | "conv2d" | "maxpool2d" | ...
+    inputs: tuple[str, ...]           # value names (graph inputs or node outs)
+    out: TensorSpec
+    attrs: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # op count for the cost model (MACs for matmul/conv, elem ops otherwise)
+    n_ops: int = 0
+
+
+@dataclasses.dataclass
+class Graph:
+    name: str
+    inputs: dict[str, TensorSpec]     # external inputs (weights + activations)
+    nodes: list[OpNode]
+    outputs: tuple[str, ...]
+
+    def __post_init__(self):
+        self._validate()
+
+    def _validate(self) -> None:
+        defined = set(self.inputs)
+        for n in self.nodes:
+            for i in n.inputs:
+                if i not in defined:
+                    raise ValueError(f"{n.name}: undefined input {i!r}")
+            if n.name in defined:
+                raise ValueError(f"duplicate value name {n.name!r}")
+            defined.add(n.name)
+        for o in self.outputs:
+            if o not in defined:
+                raise ValueError(f"undefined graph output {o!r}")
+
+    def node(self, name: str) -> OpNode:
+        return next(n for n in self.nodes if n.name == name)
+
+    def value_spec(self, name: str) -> TensorSpec:
+        if name in self.inputs:
+            return self.inputs[name]
+        return self.node(name).out
+
+    def consumers(self, value: str) -> list[OpNode]:
+        return [n for n in self.nodes if value in n.inputs]
+
+    def topo(self) -> Iterable[OpNode]:
+        # nodes are stored in topological order by construction (validated)
+        return iter(self.nodes)

@@ -1,0 +1,41 @@
+"""SNAX-MLIR pass 1: Device Placement.
+
+Each workload op is assigned to the accelerator that supports its kernel
+type, judged by the declared control/kernel descriptions; incompatible
+sections fall back to the RISC-V management core (paper SS V).  When several
+accelerators support a kernel, the fastest datapath for that node wins.
+"""
+from __future__ import annotations
+
+from repro.core.cluster import Cluster
+from repro.core.graph import Graph
+
+__all__ = ["place"]
+
+
+def place(
+    graph: Graph,
+    cluster: Cluster,
+    *,
+    disabled: frozenset[str] = frozenset(),
+) -> dict[str, str]:
+    """Return {node name -> accelerator name}.
+
+    ``disabled`` lets experiments ablate accelerators (the Fig. 8 ladder:
+    RISC-V only -> +GeMM -> +maxpool) without touching the cluster.
+    """
+    placement: dict[str, str] = {}
+    for node in graph.topo():
+        candidates = [
+            a
+            for a in cluster.supporting(node.kernel)
+            if a.name not in disabled
+        ]
+        if not candidates:
+            raise ValueError(
+                f"no device supports kernel {node.kernel!r} for node "
+                f"{node.name!r} (and no host fallback registered)"
+            )
+        best = max(candidates, key=lambda a: a.cost.ops_per_cycle)
+        placement[node.name] = best.name
+    return placement

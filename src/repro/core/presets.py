@@ -1,0 +1,234 @@
+"""Preset SNAX clusters + workloads mirroring the paper's Fig. 6.
+
+  * ``cluster_6b()`` — single RISC-V32I core runs everything.
+  * ``cluster_6c()`` — + GeMM accelerator (512 PEs, 8x8x8/cycle).
+  * ``cluster_6d()`` — + max-pool accelerator (8 kernels/cycle), sharing a
+    management core with the DMA.
+  * ``tinyml_graph()`` — the Fig. 6a workload: conv -> maxpool -> dense,
+    int8 (plus relu sections that always stay on the host core).
+
+The paper configures all of this through one configuration file; here the
+presets are plain constructors over the same parameter space.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accelerator import AcceleratorSpec, riscv_core_spec
+from repro.core.cluster import Cluster
+from repro.core.costmodel import AccelCost, ClusterHw
+from repro.core.graph import Graph, OpNode, TensorSpec
+from repro.core.streamer import Streamer
+from repro.kernels.gemm import ops as gemm_ops
+from repro.kernels.maxpool import ops as maxpool_ops
+
+__all__ = [
+    "cluster_6b", "cluster_6c", "cluster_6d", "tinyml_graph",
+    "host_fns",
+]
+
+
+# --------------------------------------------------------------------------
+# Requantization: the paper's datapaths are int8 end-to-end; accumulators
+# are 32-bit and written back to SPM as requantized int8 (shift + clip).
+# Applied identically on every device so placements are bit-equivalent.
+# --------------------------------------------------------------------------
+def requant(out, attrs):
+    shift = attrs.get("requant_shift")
+    if shift is not None and jnp.issubdtype(out.dtype, jnp.integer):
+        out = jnp.clip(out >> shift, -128, 127).astype(jnp.int8)
+    if attrs.get("relu"):
+        # fused activation: the datapaths apply requant+relu on write-back
+        out = jnp.maximum(out, 0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Host (RISC-V core) fallback kernels: straightforward jnp semantics.
+# --------------------------------------------------------------------------
+def _host_conv2d(attrs, x, w):
+    stride = attrs.get("stride", 1)
+    padding = attrs.get("padding", 0)
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32) if jnp.issubdtype(x.dtype, jnp.integer)
+        else x,
+        w.astype(jnp.int32) if jnp.issubdtype(w.dtype, jnp.integer)
+        else w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return requant(out, attrs)
+
+
+def _host_maxpool(attrs, x):
+    k = attrs.get("k", 2)
+    init = (
+        jnp.array(-jnp.inf, x.dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+        else jnp.array(jnp.iinfo(x.dtype).min, x.dtype)
+    )
+    return jax.lax.reduce_window(
+        x, init, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID",
+    )
+
+
+def _host_dense(attrs, x, w):
+    acc = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    return requant(jnp.dot(x, w, preferred_element_type=acc), attrs)
+
+
+def _host_relu(attrs, x):
+    return jnp.maximum(x, 0)
+
+
+def _host_flatten(attrs, x):
+    return x.reshape(x.shape[0], -1)
+
+
+def host_fns():
+    return {
+        "conv2d": _host_conv2d,
+        "maxpool2d": _host_maxpool,
+        "dense": _host_dense,
+        "relu": _host_relu,
+        "flatten": _host_flatten,
+    }
+
+
+# --------------------------------------------------------------------------
+# Accelerators
+# --------------------------------------------------------------------------
+def gemm_accelerator() -> AcceleratorSpec:
+    """512-PE GeMM accel: 8x8x8 int8 MACs/cycle, 512-bit A/B, 2048-bit O."""
+    streamers = (
+        Streamer("A", (8, 8), advance=("m", "k"), elem_bits=8,
+                 port_bits=512),
+        Streamer("B", (8, 8), advance=("k", "n"), elem_bits=8,
+                 port_bits=512),
+        Streamer("O", (8, 8), advance=("m", "n"), elem_bits=32,
+                 port_bits=2048),
+    )
+    return AcceleratorSpec(
+        name="gemm-accel",
+        kernels=("matmul", "dense", "conv2d"),
+        compute_fns={
+            "matmul": lambda attrs, a, b: requant(
+                gemm_ops.matmul(a, b), attrs),
+            "dense": lambda attrs, x, w: requant(
+                gemm_ops.dense(attrs, x, w), attrs),
+            "conv2d": lambda attrs, x, w: requant(
+                gemm_ops.conv2d_as_gemm(attrs, x, w), attrs),
+        },
+        cost=AccelCost(ops_per_cycle=512),
+        streamers=streamers,
+        csr_registers=("m", "n", "k", "a_ptr", "b_ptr", "o_ptr",
+                       "a_strides", "b_strides", "o_strides", "start"),
+    )
+
+
+def maxpool_accelerator() -> AcceleratorSpec:
+    """8 parallel max-pool kernels, 512-bit in/out streamers."""
+    streamers = (
+        Streamer("I", (8, 8), advance=("n", "c"), elem_bits=8,
+                 port_bits=512),
+        Streamer("O", (8, 8), advance=("n", "c"), elem_bits=8,
+                 port_bits=512),
+    )
+    return AcceleratorSpec(
+        name="maxpool-accel",
+        kernels=("maxpool2d",),
+        compute_fns={"maxpool2d": maxpool_ops.maxpool2d},
+        cost=AccelCost(ops_per_cycle=8),  # 8 parallel max-pool kernels
+        streamers=streamers,
+        csr_registers=("h", "w", "c", "k", "i_ptr", "o_ptr", "start"),
+    )
+
+
+# --------------------------------------------------------------------------
+# Clusters (Fig. 6b/6c/6d)
+# --------------------------------------------------------------------------
+def cluster_6b(hw: ClusterHw | None = None) -> Cluster:
+    hw = hw or ClusterHw()
+    return Cluster(
+        name="snax-6b",
+        accelerators=[riscv_core_spec(host_fns(), hw)],
+        hw=hw,
+        core_map={"core0": ()},
+    )
+
+
+def cluster_6c(hw: ClusterHw | None = None) -> Cluster:
+    hw = hw or ClusterHw()
+    return Cluster(
+        name="snax-6c",
+        accelerators=[riscv_core_spec(host_fns(), hw), gemm_accelerator()],
+        hw=hw,
+        core_map={"core0": (), "core1": ("gemm-accel",)},
+    )
+
+
+def cluster_6d(hw: ClusterHw | None = None) -> Cluster:
+    hw = hw or ClusterHw()
+    return Cluster(
+        name="snax-6d",
+        accelerators=[
+            riscv_core_spec(host_fns(), hw),
+            gemm_accelerator(),
+            maxpool_accelerator(),
+        ],
+        hw=hw,
+        # 6d: maxpool shares a management core with the DMA (paper SS VI-B)
+        core_map={
+            "core0": (),
+            "core1": ("gemm-accel",),
+            "core2": ("maxpool-accel", "dma-engine"),
+        },
+    )
+
+
+# --------------------------------------------------------------------------
+# Workload (Fig. 6a): conv -> maxpool -> fully connected, int8
+# --------------------------------------------------------------------------
+def tinyml_graph(
+    batch: int = 8,
+    img: int = 16,
+    cin: int = 8,
+    cout: int = 32,
+    k: int = 3,
+    fc_out: int = 32,
+) -> Graph:
+    ho = img  # stride-1, same padding
+    po = ho // 2
+    conv_ops = batch * ho * ho * cout * (k * k * cin)
+    pool_ops = batch * po * po * cout * 4
+    fc_in = po * po * cout
+    fc_ops = batch * fc_in * fc_out
+    return Graph(
+        name="fig6a-tinyml",
+        inputs={
+            "x": TensorSpec((batch, img, img, cin), "int8"),
+            "w_conv": TensorSpec((k, k, cin, cout), "int8"),
+            "w_fc": TensorSpec((fc_in, fc_out), "int8"),
+        },
+        nodes=[
+            OpNode("conv", "conv2d", ("x", "w_conv"),
+                   TensorSpec((batch, ho, ho, cout), "int8"),
+                   {"stride": 1, "padding": k // 2, "requant_shift": 5,
+                    "relu": True},
+                   conv_ops),
+            OpNode("pool", "maxpool2d", ("conv",),
+                   TensorSpec((batch, po, po, cout), "int8"),
+                   {"k": 2}, pool_ops),
+            OpNode("flat", "flatten", ("pool",),
+                   TensorSpec((batch, fc_in), "int8"),
+                   {}, 0),
+            OpNode("fc", "dense", ("flat", "w_fc"),
+                   TensorSpec((batch, fc_out), "int32"),
+                   {}, fc_ops),
+        ],
+        outputs=("fc",),
+    )

@@ -1,0 +1,159 @@
+"""SNAX-MLIR pass 3: Asynchronous Scheduling.
+
+The virtual pipeline (paper Fig. 5) is unrolled over tiles: stage ``s``
+processes tile ``t - s`` at tick ``t``.  Barriers are inserted only between
+stages with data dependencies; DMA-in / compute stages / DMA-out all overlap,
+which is precisely the loose-control + tight-data execution model of Fig. 3.
+
+The schedule also yields the cycle/utilization model used by the Fig. 8 /
+Fig. 10 benchmarks:
+  * ``pipelined``   — asynchronous parallel stages (SNAX execution model);
+  * ``sequential``  — one task at a time, CSR setup exposed, DMA not
+    overlapped (the conventional loosely-coupled baseline, cf. C runtime).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+from repro.core.accelerator import Task
+from repro.core.allocation import AllocationPlan
+from repro.core.cluster import Cluster
+from repro.core.graph import Graph
+
+__all__ = ["StageTask", "ScheduleReport", "build_schedule"]
+
+DMA = "dma-engine"
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTask:
+    stage: str                 # "dma_in" | node name | "dma_out"
+    device: str                # accelerator name or DMA
+    cycles: dict[str, int]     # from costmodel.node_cycles (or dma)
+
+
+@dataclasses.dataclass
+class ScheduleReport:
+    mode: Literal["pipelined", "sequential"]
+    stages: list[StageTask]            # one steady-state tile per stage
+    n_tiles: int
+    total_cycles: int
+    device_busy: dict[str, int]        # compute-busy cycles per device
+    device_util_pct: dict[str, float]  # busy / total
+    system_util_pct: float             # bottleneck device utilization
+
+    def speedup_over(self, other: "ScheduleReport") -> float:
+        return other.total_cycles / self.total_cycles
+
+
+def _node_task(graph: Graph, node_name: str, accel_name: str,
+               cluster: Cluster, n_tiles: int,
+               streamed: frozenset[str]) -> StageTask:
+    node = graph.node(node_name)
+    spec = cluster.accel(accel_name)
+    # activations (streamed graph inputs + node outputs) are tiled; resident
+    # weights stream their full footprint through the port every tile.
+    operand_bytes = [
+        graph.value_spec(i).nbytes
+        // (n_tiles if _tiled(graph, i, streamed) else 1)
+        for i in node.inputs
+    ] + [node.out.nbytes // n_tiles]
+    dataflow = {}
+    if spec.streamers:
+        # assign operands to ports in declaration order; output on last port
+        ports = list(spec.streamers)
+        for port, nbytes in zip(ports, operand_bytes):
+            n_blocks = math.ceil(nbytes / max(port.block_bytes, 1))
+            dataflow[port.name] = (n_blocks,)
+    task = Task(
+        accel=accel_name,
+        kernel=node.kernel,
+        node=node.name,
+        csr={},
+        dataflow=dataflow,
+        n_ops=max(1, node.n_ops // n_tiles),
+        stream_bytes=sum(operand_bytes),
+    )
+    return StageTask(node.name, accel_name, task.cycles(spec, cluster.hw))
+
+
+def _tiled(graph: Graph, value: str, streamed: frozenset[str]) -> bool:
+    # node outputs and streamed activations are tiled; weights are not.
+    return value not in graph.inputs or value in streamed
+
+
+def build_schedule(
+    graph: Graph,
+    placement: dict[str, str],
+    cluster: Cluster,
+    *,
+    plan: AllocationPlan,
+    n_tiles: int,
+    streamed: tuple[str, ...],
+    mode: Literal["pipelined", "sequential"] = "pipelined",
+    weight_streaming: bool = False,
+) -> ScheduleReport:
+    hw = cluster.hw
+    in_bytes = sum(
+        graph.inputs[s].nbytes // n_tiles for s in streamed
+    )
+    if weight_streaming:
+        # layer weights staged from HBM through the DMA each tile-batch
+        in_bytes += sum(
+            spec.nbytes for n, spec in graph.inputs.items()
+            if n not in streamed
+        ) // n_tiles
+    out_bytes = sum(graph.value_spec(o).nbytes // n_tiles for o in graph.outputs)
+
+    stages: list[StageTask] = [
+        StageTask("dma_in", DMA, _dma_cycles(hw, in_bytes))
+    ]
+    for node in graph.topo():
+        stages.append(_node_task(graph, node.name, placement[node.name],
+                                 cluster, n_tiles, frozenset(streamed)))
+    stages.append(StageTask("dma_out", DMA, _dma_cycles(hw, out_bytes)))
+
+    if mode == "pipelined":
+        total = _pipelined_cycles(stages, n_tiles, hw.barrier_cycles)
+    else:
+        # conventional execution: every task serial, CSR setup exposed
+        per_tile = sum(
+            s.cycles["total"] + s.cycles.get("setup_exposed", 0)
+            + hw.barrier_cycles + hw.csr_setup_cycles * (s.device != DMA)
+            for s in stages
+        )
+        total = per_tile * n_tiles
+
+    busy: dict[str, int] = {}
+    for s in stages:
+        busy[s.device] = busy.get(s.device, 0) + s.cycles["compute"] * n_tiles
+    util = {d: round(100.0 * b / total, 2) for d, b in busy.items()}
+    compute_devices = [d for d in busy if d != DMA]
+    system = max((util[d] for d in compute_devices), default=0.0)
+    return ScheduleReport(mode, stages, n_tiles, total, busy, util, system)
+
+
+def _dma_cycles(hw, nbytes: int) -> dict[str, int]:
+    c = hw.dma_cycles(nbytes)
+    return {"compute": c, "stream": c, "setup": 0, "total": c,
+            "util_pct": 100.0}
+
+
+def _pipelined_cycles(stages: list[StageTask], n_tiles: int,
+                      barrier: int) -> int:
+    """Sum over ticks of the slowest device, devices sharing stages serialize."""
+    n_stages = len(stages)
+    total = 0
+    for tick in range(n_tiles + n_stages - 1):
+        per_device: dict[str, int] = {}
+        for s_idx, st in enumerate(stages):
+            tile = tick - s_idx
+            if 0 <= tile < n_tiles:
+                per_device[st.device] = (
+                    per_device.get(st.device, 0) + st.cycles["total"]
+                )
+        if per_device:
+            total += max(per_device.values()) + barrier
+    return total

@@ -1,0 +1,130 @@
+"""SNAX data streamers, adapted to TPU.
+
+In the SNAX cluster, each accelerator port is fed by a *data streamer*: an
+autonomous address generator executing a nested affine for-loop program
+(bounds x strides, configured at run time via CSR), double-buffered through a
+FIFO so the datapath receives one operand block per cycle.
+
+On TPU the same program is exactly a Pallas ``BlockSpec``: the temporal loop
+nest is the ``pallas_call`` grid, the spatial unrolling is the block shape,
+and the affine address function is the ``index_map``.  Pallas's implicit
+double-buffered HBM->VMEM DMA pipeline plays the role of the streamer FIFO.
+
+``Streamer`` is therefore the single source of truth used by
+  * the Pallas kernels (``to_block_spec`` -> BlockSpec),
+  * the SPM allocator (``vmem_bytes`` -> buffer budget),
+  * the cost model (``stream_cycles`` -> port-bandwidth-limited cycles).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["Streamer", "LoopNest"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopNest:
+    """A temporal affine loop nest: ``for l0 in range(b0): for l1 in ...``.
+
+    ``bounds`` are the (runtime-configurable) loop counters, outermost first.
+    Loop names in ``names`` identify loops shared across streamers of the
+    same accelerator (the pallas grid is the union of loops over all ports).
+    """
+
+    names: tuple[str, ...]
+    bounds: tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.names) == len(self.bounds)
+
+    @property
+    def trip_count(self) -> int:
+        return math.prod(self.bounds) if self.bounds else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Streamer:
+    """One accelerator data port.
+
+    Attributes:
+      name: port name (e.g. "A", "B", "O").
+      block_shape: spatial block fetched per loop iteration (the port width).
+      advance: for each *tensor* dim, the name of the temporal loop whose
+        index selects the block along that dim, or ``None`` if the dim is
+        not advanced (block index 0 — e.g. the K-reduction operand dim that
+        a revisiting output port ignores).
+      elem_bits: element width (paper's datapaths are 8-bit; TPU ones bf16).
+      port_bits: physical port width in bits per cycle (512 in the paper's
+        GeMM / maxpool streamers). Used by the cost model only.
+      fifo_depth: double-buffer depth (>=2 hides DMA latency). On TPU this
+        maps to the Pallas pipeline depth; kept for cost/validation.
+    """
+
+    name: str
+    block_shape: tuple[int, ...]
+    advance: tuple[str | None, ...]
+    elem_bits: int = 16
+    port_bits: int = 512
+    fifo_depth: int = 2
+
+    def __post_init__(self):
+        assert len(self.block_shape) == len(self.advance)
+
+    # ---- Pallas lowering ------------------------------------------------
+    def to_block_spec(self, grid_loops: Sequence[str]) -> pl.BlockSpec:
+        """Compile the streamer program to a Pallas BlockSpec.
+
+        ``grid_loops`` is the accelerator-wide loop order (the pallas grid),
+        outermost first; the index_map selects, for every tensor dim, the
+        grid index of the loop that advances it.
+        """
+        positions = {ln: i for i, ln in enumerate(grid_loops)}
+        # Indices of grid loops used per tensor dim (None -> constant 0).
+        dim_loop_pos = tuple(
+            positions[a] if a is not None else None for a in self.advance
+        )
+
+        def index_map(*grid_idx):
+            return tuple(
+                grid_idx[p] if p is not None else 0 for p in dim_loop_pos
+            )
+
+        return pl.BlockSpec(self.block_shape, index_map)
+
+    # ---- budgets / cost --------------------------------------------------
+    @property
+    def block_bytes(self) -> int:
+        return math.prod(self.block_shape) * self.elem_bits // 8
+
+    @property
+    def vmem_bytes(self) -> int:
+        """VMEM (SPM) footprint including double buffering."""
+        return self.block_bytes * self.fifo_depth
+
+    def stream_cycles(self, n_blocks: int) -> int:
+        """Cycles to move ``n_blocks`` blocks through the port."""
+        cycles_per_block = math.ceil(self.block_bytes * 8 / self.port_bits)
+        return n_blocks * cycles_per_block
+
+    def mxu_aligned(self, lane: int = 128, sublane: int = 8) -> bool:
+        """Structural check: last two dims hardware-aligned for the MXU/VPU."""
+        if len(self.block_shape) < 2:
+            return self.block_shape[-1] % lane == 0
+        return (
+            self.block_shape[-1] % lane == 0
+            and self.block_shape[-2] % sublane == 0
+        )
+
+
+def union_grid(loop_nest: LoopNest, *streamers: Streamer) -> tuple[int, ...]:
+    """The pallas grid implied by a shared loop nest (sanity-checks ports)."""
+    for s in streamers:
+        for a in s.advance:
+            if a is not None and a not in loop_nest.names:
+                raise ValueError(f"streamer {s.name} advances unknown loop {a}")
+    return tuple(loop_nest.bounds)

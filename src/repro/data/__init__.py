@@ -1,0 +1,1 @@
+"""Data substrate: deterministic, resumable token pipelines."""

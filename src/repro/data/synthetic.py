@@ -1,0 +1,79 @@
+"""Deterministic synthetic batches for every model family.
+
+``make_batch(cfg, batch, seq, step)`` is pure in (config, step): any host can
+regenerate any batch from the step index alone — the property the
+fault-tolerance layer relies on for exact resume and for straggler
+re-dispatch (no shared data-server state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["make_batch"]
+
+
+def _key(step: int, salt: int = 0):
+    return jax.random.fold_in(jax.random.PRNGKey(20260712), step * 7 + salt)
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, step: int = 0,
+               *, kind: str = "train"):
+    """Family-appropriate batch dict of concrete arrays."""
+    k1, k2, k3 = jax.random.split(_key(step), 3)
+    v = cfg.vocab_size
+    fam = cfg.family
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def sample_tokens(key, shape):
+        # skewed unigram distribution (not uniform noise) so optimization
+        # tests have signal: loss can fall from log(V) toward the source
+        # entropy
+        logits = -0.05 * jnp.arange(v, dtype=jnp.float32)
+        return jax.random.categorical(key, logits, shape=shape).astype(
+            jnp.int32)
+
+    if fam in ("dense", "moe", "hybrid", "ssm"):
+        tokens = sample_tokens(k1, (batch, seq))
+        out = {"tokens": tokens}
+        if kind == "train":
+            out["labels"] = jnp.roll(tokens, -1, axis=1)
+        return out
+    if fam == "vlm":
+        np_ = cfg.n_patches
+        tokens = sample_tokens(k1, (batch, seq - np_))
+        # M-RoPE positions: patches get (t=0, h, w) grid, text gets
+        # (t, t, t) sequential positions after the patch block
+        side = int(np_ ** 0.5) or 1
+        hh = jnp.arange(np_) // side
+        ww = jnp.arange(np_) % side
+        tpos = jnp.zeros((np_,), jnp.int32)
+        text = jnp.arange(seq - np_) + np_
+        pos3 = jnp.stack([
+            jnp.concatenate([tpos, text]),
+            jnp.concatenate([hh, text]),
+            jnp.concatenate([ww, text]),
+        ]).astype(jnp.int32)
+        pos3 = jnp.broadcast_to(pos3[:, None], (3, batch, seq))
+        out = {
+            "tokens": tokens,
+            "patch_embeds": jax.random.normal(
+                k2, (batch, np_, cfg.d_model), cd),
+            "pos3": pos3,
+        }
+        if kind == "train":
+            out["labels"] = jnp.roll(tokens, -1, axis=1)
+        return out
+    if fam == "audio":
+        sd = max(1, seq // cfg.encdec.dec_ratio)
+        dec = sample_tokens(k1, (batch, sd))
+        out = {
+            "frames": jax.random.normal(k2, (batch, seq, cfg.d_model), cd),
+            "dec_tokens": dec,
+        }
+        if kind == "train":
+            out["labels"] = jnp.roll(dec, -1, axis=1)
+        return out
+    raise ValueError(fam)

@@ -1,0 +1,2 @@
+"""Distributed building blocks: compressed collectives, pipeline stages,
+sequence-parallel flash decode."""

@@ -1,0 +1,62 @@
+"""Gradient compression for the cross-pod (DCN) reduction.
+
+Cross-pod links are the scarcest bandwidth in a multi-pod job.  We compress
+the gradient all-reduce over the ``pod`` axis to int8 with *error feedback*:
+
+    q, scale = quantize(g + err)            # per-leaf symmetric int8
+    g_hat    = mean-over-pods(dequant(q))   # int8 on the wire
+    err'     = (g + err) - dequant(q)       # residual folded into next step
+
+On the wire the collective moves int8 (4x less than f32, 2x less than bf16);
+error feedback makes the quantization noise vanish asymptotically (the
+standard EF-SGD result), which the convergence test exercises.
+
+``compressed_psum_mean`` must run inside ``shard_map`` (it controls the
+collective dtype explicitly — under plain jit XLA picks the dtype).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean",
+           "compress_tree", "decompress_tree"]
+
+
+def quantize_int8(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: str, err: jax.Array):
+    """Error-feedback int8 mean-reduction over ``axis_name`` (shard_map).
+
+    Returns (mean, new_err).  Wire format: int8 all-gather + local sum, so
+    the HLO collective moves 1 byte/elem instead of 4.
+    """
+    n = jax.lax.psum(1, axis_name)
+    comp = x.astype(jnp.float32) + err
+    q, scale = quantize_int8(comp)
+    qg = jax.lax.all_gather(q, axis_name)              # int8 on the wire
+    sg = jax.lax.all_gather(scale, axis_name)          # tiny
+    mean = jnp.tensordot(
+        sg, qg.astype(jnp.float32), axes=((0,), (0,))) / n
+    new_err = comp - dequantize_int8(q, scale)
+    return mean.astype(x.dtype), new_err
+
+
+def compress_tree(tree):
+    """Standalone codec (checkpoint shrink, diagnostics)."""
+    return jax.tree_util.tree_map(quantize_int8, tree)
+
+
+def decompress_tree(qtree):
+    return jax.tree_util.tree_map(
+        lambda qs: dequantize_int8(*qs), qtree,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)

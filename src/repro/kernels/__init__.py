@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel package has
+  * ``kernel.py`` — the ``pl.pallas_call`` body with explicit ``BlockSpec``
+    VMEM tiling (BlockSpecs generated from ``repro.core.streamer.Streamer``
+    where the kernel realizes a SNAX accelerator datapath),
+  * ``ops.py``    — the jit'd public wrapper (padding, dtype policy,
+    interpret-mode selection: Pallas-TPU on TPU, interpret=True on CPU),
+  * ``ref.py``    — the pure-jnp oracle used by the allclose test sweeps.
+"""

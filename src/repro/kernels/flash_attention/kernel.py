@@ -1,0 +1,120 @@
+"""Causal flash attention Pallas kernel (GQA-aware), VMEM-tiled.
+
+The online-softmax state (running max m, denominator l, accumulator acc)
+lives in VMEM scratch and is carried across the innermost (kv) grid
+dimension — the TPU-idiomatic adaptation of the SRAM-resident state of the
+original GPU algorithm.  GQA is handled in the K/V BlockSpec index maps
+(q-head h reads kv-head h // group), so no KV repeat is materialized.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); fully-masked kv blocks above
+the causal diagonal are skipped with ``pl.when`` (zero compute, the streamer
+analogue of loop-bound clipping).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _attn_body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+               *, scale: float, bq: int, bk: int, nkv: int, causal: bool):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                    # (bq, bk)
+        if causal:
+            q_pos = iq * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            k_pos = ikv * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the diagonal
+        pl.when(ikv * bk <= iq * bq + (bq - 1))(compute)
+    else:
+        compute()
+
+    @pl.when(ikv == nkv - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "causal", "scale", "interpret")
+)
+def flash_attention_fwd(
+    q: jax.Array,            # (B, Hq, Sq, D)
+    k: jax.Array,            # (B, Hkv, Skv, D)
+    v: jax.Array,            # (B, Hkv, Skv, D)
+    *,
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    if scale is None:
+        scale = d ** -0.5
+    nq, nkv = sq // bq, skv // bk
+
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, bk, d), lambda b_, h, i, j: (b_, h // group, j, 0)
+    )
+    o_spec = pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0))
+
+    return pl.pallas_call(
+        functools.partial(
+            _attn_body, scale=scale, bq=bq, bk=bk, nkv=nkv, causal=causal
+        ),
+        grid=(b, hq, nq, nkv),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,3 @@
+from repro.kernels.gemm.ops import matmul, conv2d_as_gemm, dense
+
+__all__ = ["matmul", "conv2d_as_gemm", "dense"]

@@ -1,0 +1,93 @@
+"""Blocked GEMM Pallas kernel — the SNAX GeMM accelerator on the MXU.
+
+The paper's GeMM accelerator processes 8x8x8 (int8) matrices per cycle fed by
+512-bit streamers.  On TPU the datapath is the 128x128 MXU; the streamer
+loop-nest programs become the BlockSpecs below (built literally from
+``repro.core.streamer.Streamer``): the temporal loops (m, n, k) are the
+pallas grid, the spatial block is the VMEM tile, and Pallas's double-buffered
+HBM->VMEM pipeline plays the streamer-FIFO role.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.streamer import LoopNest, Streamer
+
+__all__ = ["gemm", "gemm_streamers"]
+
+
+def gemm_streamers(bm: int, bn: int, bk: int, elem_bits: int):
+    """The three data ports of the GeMM accelerator (A, B in; O out)."""
+    nest = LoopNest(names=("m", "n", "k"), bounds=(0, 0, 0))  # bounds at call
+    a = Streamer("A", (bm, bk), advance=("m", "k"), elem_bits=elem_bits)
+    b = Streamer("B", (bk, bn), advance=("k", "n"), elem_bits=elem_bits)
+    o = Streamer("O", (bm, bn), advance=("m", "n"), elem_bits=elem_bits,
+                 port_bits=2048)  # paper: 2048-bit output write port
+    return nest, (a, b, o)
+
+
+def _gemm_body(a_ref, b_ref, o_ref, acc_ref, *, nk: int, acc_dtype):
+    """Accumulate A[m,k] @ B[k,n] over the k grid dim into VMEM scratch."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=acc_dtype
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``a @ b`` with explicit (bm, bn, bk) VMEM tiling.
+
+    Shapes must be multiples of the block (the ops.py wrapper pads).
+    int8 x int8 accumulates in int32 (the paper's precision); floats in f32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape)
+
+    integer = jnp.issubdtype(a.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    if out_dtype is None:
+        out_dtype = jnp.int32 if integer else a.dtype
+
+    nm, nn, nk = m // bm, n // bn, k // bk
+    _, (sa, sb, so) = gemm_streamers(bm, bn, bk, a.dtype.itemsize * 8)
+    grid_loops = ("m", "n", "k")
+
+    return pl.pallas_call(
+        functools.partial(_gemm_body, nk=nk, acc_dtype=acc_dtype),
+        grid=(nm, nn, nk),
+        in_specs=[
+            sa.to_block_spec(grid_loops),
+            sb.to_block_spec(grid_loops),
+        ],
+        out_specs=so.to_block_spec(grid_loops),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+    )(a, b)

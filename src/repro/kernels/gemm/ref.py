@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the GeMM kernel (and its conv/dense lowerings)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "conv2d_ref", "dense_ref", "im2col"]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    integer = jnp.issubdtype(a.dtype, jnp.integer)
+    acc = jnp.int32 if integer else jnp.float32
+    if out_dtype is None:
+        out_dtype = jnp.int32 if integer else a.dtype
+    return jnp.dot(a, b, preferred_element_type=acc).astype(out_dtype)
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           padding: int = 0) -> jax.Array:
+    """NHWC -> (N*Ho*Wo, kh*kw*C) patch matrix (the GeMM-accel conv lowering)."""
+    n, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding),
+                        (0, 0)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                jax.lax.slice(
+                    x, (0, i, j, 0),
+                    (n, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1,
+                     c),
+                    (1, stride, stride, 1),
+                )
+            )
+    # (N, Ho, Wo, kh*kw*C)
+    stacked = jnp.concatenate(patches, axis=-1)
+    return stacked.reshape(n * ho * wo, kh * kw * c), (n, ho, wo)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+               padding: int = 0, out_dtype=None) -> jax.Array:
+    """NHWC x (kh, kw, Cin, Cout) conv via im2col + matmul_ref."""
+    kh, kw, cin, cout = w.shape
+    cols, (n, ho, wo) = im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = matmul_ref(cols, wmat, out_dtype)
+    return out.reshape(n, ho, wo, cout)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    return matmul_ref(x, w, out_dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.maxpool.ops import maxpool2d
+
+__all__ = ["maxpool2d"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the maxpool kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["maxpool2d_ref"]
+
+
+def maxpool2d_ref(x: jax.Array, k: int = 2) -> jax.Array:
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // k, k, w // k, k, c)
+    return jnp.max(x, axis=(2, 4))

@@ -1,0 +1,41 @@
+"""RMSNorm Pallas kernel: row-blocked, f32 reduction in VMEM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm_fwd"]
+
+
+def _rms_body(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                 # (bm, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "eps", "interpret"))
+def rmsnorm_fwd(
+    x: jax.Array,            # (rows, d)
+    w: jax.Array,            # (d,)
+    *,
+    bm: int = 256,
+    eps: float = 1e-6,
+    interpret: bool = False,
+) -> jax.Array:
+    rows, d = x.shape
+    assert rows % bm == 0, (rows, bm)
+    return pl.pallas_call(
+        functools.partial(_rms_body, eps=eps),
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

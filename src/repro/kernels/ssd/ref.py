@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the SSD kernel: direct sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_ref"]
+
+
+def ssd_ref(xdt, bmat, cmat, lcum):
+    """Sequential state-space recurrence (exact, O(S) steps).
+
+    xdt (B,H,nc,Q,P), bmat (B,nc,Q,N), cmat (B,nc,Q,N), lcum (B,H,nc,Q).
+    Returns y (B,H,nc,Q,P).
+    """
+    bsz, h, nc, q, p = xdt.shape
+    n = bmat.shape[-1]
+    # flatten chunks to a single time axis with per-step log decays
+    ldec = jnp.diff(
+        lcum.reshape(bsz, h, nc, q), axis=-1, prepend=jnp.zeros(
+            (bsz, h, nc, 1), lcum.dtype))
+    # first element of each chunk's cumsum IS its own log-decay
+    ldec = ldec.at[..., 0].set(lcum[..., 0])
+    ldec = ldec.reshape(bsz, h, nc * q)
+    x = xdt.reshape(bsz, h, nc * q, p).astype(jnp.float32)
+    b = jnp.repeat(bmat[:, None], h, axis=1).reshape(
+        bsz, h, nc * q, n).astype(jnp.float32)
+    c = jnp.repeat(cmat[:, None], h, axis=1).reshape(
+        bsz, h, nc * q, n).astype(jnp.float32)
+
+    def step(s, t):
+        xt, bt, ct, ld = t
+        s = s * jnp.exp(ld)[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(x, 2, 0), jnp.moveaxis(b, 2, 0),
+         jnp.moveaxis(c, 2, 0), jnp.moveaxis(ldec, 2, 0)))
+    y = jnp.moveaxis(ys, 0, 2).reshape(bsz, h, nc, q, p)
+    return y.astype(xdt.dtype)

@@ -1,0 +1,1 @@
+"""Model zoo: composable pure-JAX modules for all assigned families."""

@@ -1,0 +1,153 @@
+"""Shared building blocks: params-with-logical-axes, norms, dense, RoPE.
+
+Parameters are plain pytrees of arrays.  Every init function returns
+``(params, specs)`` where ``specs`` mirrors the params tree with a tuple of
+*logical axis names* per array dim (e.g. ``("embed", "mlp")``); the sharding
+layer (``repro.sharding.rules``) resolves logical axes to mesh axes
+divisibility-aware.  No framework dependency (flax etc.) — the module system
+is functions + dicts, which keeps everything pjit/shard_map friendly.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "embed_init", "norm_init", "scalar_init",
+    "apply_dense", "apply_norm", "rope", "mrope", "make_positions",
+    "gelu", "swiglu_combine", "cast",
+]
+
+
+# ---------------------------------------------------------------- params ----
+def dense_init(key, d_in: int, d_out, axes, *, bias: bool = False,
+               dtype=jnp.bfloat16, scale: float | None = None):
+    """Dense weight (d_in, *d_out). axes = logical names, len == rank."""
+    if isinstance(d_out, int):
+        d_out = (d_out,)
+    shape = (d_in, *d_out)
+    assert len(axes) == len(shape), (axes, shape)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    params = {"w": w}
+    specs = {"w": tuple(axes)}
+    if bias:
+        params["b"] = jnp.zeros(shape[1:], dtype)
+        specs["b"] = tuple(axes[1:])
+    return params, specs
+
+
+def embed_init(key, vocab: int, d: int, *, dtype=jnp.bfloat16,
+               axes=("vocab", "embed")):
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return {"w": w}, {"w": tuple(axes)}
+
+
+def norm_init(d: int, *, kind: str = "rms", dtype=jnp.float32):
+    params = {"scale": jnp.ones((d,), dtype)}
+    specs = {"scale": ("embed",)}
+    if kind == "ln":
+        params["bias"] = jnp.zeros((d,), dtype)
+        specs["bias"] = ("embed",)
+    return params, specs
+
+
+def scalar_init(value, shape, axes, dtype=jnp.float32):
+    return jnp.full(shape, value, dtype), tuple(axes)
+
+
+# ---------------------------------------------------------------- apply ----
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def apply_dense(p, x, *, out_reshape=None):
+    """x @ w (+ b); w may be (d_in, a, b, ...) — contracted on dim 0."""
+    w = p["w"]
+    y = jax.lax.dot_general(
+        x, cast(w, x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+    )
+    if "b" in p:
+        y = y + cast(p["b"], y.dtype)
+    if out_reshape is not None:
+        y = y.reshape(y.shape[: x.ndim - 1] + out_reshape)
+    return y
+
+
+def apply_norm(p, x, *, kind: str = "rms", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu_combine(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+
+
+# ----------------------------------------------------------------- rope ----
+def make_positions(batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def _rot_half(x):
+    a, b = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-b, a], axis=-1)
+
+
+def rope(x, positions, *, theta: float = 1e6, rotary_pct: float = 1.0):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    rd = int(d * rotary_pct) // 2 * 2
+    if rd == 0:
+        return x
+    xr, xp = x[..., :rd], x[..., rd:]
+    inv = theta ** (-jnp.arange(0, rd, 2, dtype=jnp.float32) / rd)
+    ang = positions.astype(jnp.float32)[..., None] * inv       # (B,S,rd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.concatenate([cos, cos], -1)
+    sin = jnp.concatenate([sin, sin], -1)
+    out = xr.astype(jnp.float32) * cos + _rot_half(
+        xr.astype(jnp.float32)) * sin
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def mrope(x, positions3, *, theta: float, sections: tuple[int, int, int]):
+    """Multimodal RoPE (qwen2-vl): positions3 (3, B, S), per-section freqs.
+
+    ``sections`` partition the rd/2 frequency slots into (temporal, h, w);
+    each slot's angle uses the corresponding position stream.
+    """
+    d = x.shape[-1]
+    rd = 2 * sum(sections)
+    assert rd <= d, (rd, d)
+    xr, xp = x[..., :rd], x[..., rd:]
+    inv = theta ** (-jnp.arange(0, rd, 2, dtype=jnp.float32) / rd)
+    # section id per frequency slot
+    sec = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=rd // 2
+    )
+    pos = positions3.astype(jnp.float32)          # (3, B, S)
+    # pick the position stream per slot: (B, S, rd/2)
+    pos_sel = jnp.take(pos, sec, axis=0)          # (rd/2, B, S) via axis 0
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)        # (B, S, rd/2)
+    ang = pos_sel * inv
+    cos = jnp.concatenate([jnp.cos(ang)] * 2, -1)[:, :, None, :]
+    sin = jnp.concatenate([jnp.sin(ang)] * 2, -1)[:, :, None, :]
+    out = xr.astype(jnp.float32) * cos + _rot_half(
+        xr.astype(jnp.float32)) * sin
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)

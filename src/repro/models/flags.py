@@ -1,0 +1,25 @@
+"""Global model-code flags.
+
+``UNROLL``: replace ``lax.scan`` loops (layer stacks, flash-attention chunk
+loops) with unrolled python loops.  Used ONLY by the dry-run's small
+cost-model compiles: XLA's ``cost_analysis`` counts while-loop bodies once
+(verified on this backend), so loop-free HLO is required for faithful
+flops/bytes/collective accounting.  Numerics are identical either way
+(asserted in tests).
+"""
+from __future__ import annotations
+
+import contextlib
+
+UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled():
+    global UNROLL
+    prev = UNROLL
+    UNROLL = True
+    try:
+        yield
+    finally:
+        UNROLL = prev

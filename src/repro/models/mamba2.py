@@ -1,0 +1,192 @@
+"""Mamba2 (SSD) blocks — chunked parallel scan, TPU-friendly einsums.
+
+The SSD form computes, per head h with scalar decay A_h < 0:
+    S_t = exp(dt_t A) S_{t-1} + dt_t (B_t  x_t^T)        (state N x P)
+    y_t = C_t . S_t + D_h x_t
+Chunked algorithm (chunk Q): quadratic intra-chunk term with decay mask +
+inter-chunk state carried by ``lax.scan`` — the TPU adaptation of the
+original GPU kernel: the intra-chunk einsums are MXU matmuls, the scan crosses
+chunks, and no (S x S) score matrix is ever materialized.
+
+Decode is the O(1) recurrence on a per-layer state {ssm: (B,H,N,P),
+conv: (B, K-1, conv_channels)} — this is what makes zamba2/long_500k cheap.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SsmCfg
+from repro.models.common import dense_init, norm_init, apply_norm
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode", "init_ssm_cache"]
+
+
+def _dims(d_model: int, cfg: SsmCfg):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_p
+    return d_inner, n_heads
+
+
+def mamba2_init(key, d_model: int, cfg: SsmCfg, *, dtype=jnp.bfloat16):
+    d_inner, h = _dims(d_model, cfg)
+    n = cfg.state
+    ks = jax.random.split(key, 8)
+    params, specs = {}, {}
+    for name, dout, axes, i in [
+        ("z", d_inner, ("embed", "inner"), 0),
+        ("x", d_inner, ("embed", "inner"), 1),
+        ("B", n, ("embed", "state"), 2),
+        ("C", n, ("embed", "state"), 3),
+        ("dt", h, ("embed", "ssm_heads"), 4),
+    ]:
+        params[name], specs[name] = dense_init(
+            ks[i], d_model, dout, axes, dtype=dtype)
+    conv_dim = d_inner + 2 * n
+    params["conv"] = (jax.random.normal(ks[5], (cfg.conv, conv_dim))
+                      * 0.1).astype(dtype)
+    specs["conv"] = ("conv_k", "inner")
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32)
+    specs["A_log"] = ("ssm_heads",)
+    params["dt_bias"] = jnp.zeros((h,), jnp.float32)
+    specs["dt_bias"] = ("ssm_heads",)
+    params["D"] = jnp.ones((h,), jnp.float32)
+    specs["D"] = ("ssm_heads",)
+    params["norm"], specs["norm"] = norm_init(d_inner, kind="rms")
+    params["out"], specs["out"] = dense_init(
+        ks[6], d_inner, d_model, ("inner", "embed"), dtype=dtype)
+    return params, specs
+
+
+def _causal_conv(u, w, cache=None):
+    """Depthwise causal conv; u (B,S,C), w (K,C). Returns y, new_cache."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = cache
+    ext = jnp.concatenate([pad, u], axis=1)            # (B, S+K-1, C)
+    y = sum(
+        ext[:, i:i + u.shape[1]] * w[i][None, None] for i in range(k)
+    )
+    new_cache = ext[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(y.astype(jnp.float32)).astype(u.dtype), new_cache
+
+
+def _project(params, x, cfg: SsmCfg):
+    from repro.models.common import apply_dense
+    d_inner, h = _dims(x.shape[-1], cfg)
+    z = apply_dense(params["z"], x)
+    xs = apply_dense(params["x"], x)
+    b = apply_dense(params["B"], x)
+    c = apply_dense(params["C"], x)
+    dt = apply_dense(params["dt"], x).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"])       # (B,S,H)
+    return z, xs, b, c, dt
+
+
+def mamba2_apply(params, x, cfg: SsmCfg):
+    """Training/prefill forward. x: (B, S, D) -> (B, S, D)."""
+    from repro.models.common import apply_dense
+    bsz, s, d_model = x.shape
+    d_inner, h = _dims(d_model, cfg)
+    n, p, q = cfg.state, cfg.head_p, min(cfg.chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    z, xs, b, c, dt = _project(params, x, cfg)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, params["conv"].astype(x.dtype))
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    a = -jnp.exp(params["A_log"])                      # (H,) negative
+    xh = xs.reshape(bsz, nc, q, h, p)
+    bh = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    ch = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dth = dt.reshape(bsz, nc, q, h)
+    ldec = dth * a                                      # log decay (B,nc,Q,H)
+    lcum = jnp.cumsum(ldec, axis=2)                     # inclusive cumsum
+
+    xt = (xh.astype(jnp.float32) * dth[..., None])      # dt-weighted input
+
+    # ---- intra-chunk (quadratic within Q, MXU matmuls) ----
+    # scores[i,j] = (C_i . B_j) * exp(lcum_i - lcum_j) for i >= j
+    cb = jnp.einsum("bcin,bcjn->bcij", ch, bh)          # (B,nc,Q,Q)
+    ldiff = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask the *exponent* (not the result) so the exp never overflows —
+    # where(mask, exp(big), 0) poisons gradients with inf * 0 = nan
+    ldiff = jnp.where(mask[None, None, :, :, None], ldiff, -1e30)
+    dec = jnp.exp(ldiff)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, dec, xt)
+
+    # ---- chunk-final states ----
+    # S_c = sum_j exp(lcum_Q - lcum_j) B_j x_j^T    (B,nc,H,N,P)
+    tail = jnp.exp(lcum[:, :, -1:, :] - lcum)           # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bh, tail, xt)
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])            # (B,nc,H)
+
+    # ---- inter-chunk scan ----
+    def step(s_prev, inp):
+        s_c, decay = inp                                # (B,H,N,P), (B,H)
+        s_new = s_prev * decay[..., None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, s_before = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)             # (B,nc,H,N,P)
+
+    # y_inter_i = C_i . (exp(lcum_i) * S_prev)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         ch, jnp.exp(lcum), s_before)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + params["D"][None, None, :, None] * xh.reshape(
+        bsz, s, h, p).astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = apply_norm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    return apply_dense(params["out"], y)
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SsmCfg, dtype):
+    d_inner, h = _dims(d_model, cfg)
+    conv_dim = d_inner + 2 * cfg.state
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.state, cfg.head_p), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(params, x, cache, cfg: SsmCfg):
+    """One-token step. x: (B, 1, D) -> (B, 1, D), new cache."""
+    from repro.models.common import apply_dense
+    bsz, _, d_model = x.shape
+    d_inner, h = _dims(d_model, cfg)
+    n, p = cfg.state, cfg.head_p
+
+    z, xs, b, c, dt = _project(params, x, cfg)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out, conv_cache = _causal_conv(
+        conv_in, params["conv"].astype(x.dtype), cache["conv"])
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    a = -jnp.exp(params["A_log"])
+    dt1 = dt[:, 0]                                      # (B,H)
+    decay = jnp.exp(dt1 * a)                            # (B,H)
+    xt = (xs.reshape(bsz, h, p).astype(jnp.float32)
+          * dt1[..., None])                             # (B,H,P)
+    b1 = b[:, 0].astype(jnp.float32)                    # (B,N)
+    c1 = c[:, 0].astype(jnp.float32)
+    s_new = (cache["ssm"] * decay[..., None, None]
+             + jnp.einsum("bn,bhp->bhnp", b1, xt))
+    y = jnp.einsum("bn,bhnp->bhp", c1, s_new)
+    y = y + params["D"][None, :, None] * xs.reshape(
+        bsz, h, p).astype(jnp.float32)
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = apply_norm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    out = apply_dense(params["out"], y)
+    return out, {"ssm": s_new, "conv": conv_cache}

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+GShard/Mixtral-style: router top-k -> position-in-expert via cumsum ->
+scatter tokens into an (E, C, D) buffer -> batched expert einsum -> weighted
+combine.  Capacity drops overflow tokens (capacity_factor 1.25 default).
+Shared experts (qwen2-moe, moonlight) run densely for every token.
+
+Sharding: the expert dim ("experts") goes to the model axis when divisible
+(EP — moonshot 64e / 16); otherwise expert hidden ("expert_mlp") is
+tensor-sharded (qwen2-moe 60e, d_expert 1408 = 16*88).  The router and
+dispatch stay replicated over the model axis; tokens are sharded over data.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoeCfg
+from repro.models.common import dense_init, swiglu_combine
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, d_model: int, cfg: MoeCfg, *, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    e, f = cfg.n_routed, cfg.d_expert
+    params, specs = {}, {}
+    pr, sr = dense_init(ks[0], d_model, e, ("embed", "experts_r"),
+                        dtype=jnp.float32)
+    params["router"], specs["router"] = pr, sr
+
+    def expert_bank(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        scale = 1.0 / jnp.sqrt(d_model)
+        bank = {
+            "gate": (jax.random.normal(k1, (e, d_model, f)) * scale
+                     ).astype(dtype),
+            "up": (jax.random.normal(k2, (e, d_model, f)) * scale
+                   ).astype(dtype),
+            "down": (jax.random.normal(k3, (e, f, d_model)) / jnp.sqrt(f)
+                     ).astype(dtype),
+        }
+        s = {
+            "gate": ("experts", "embed", "expert_mlp"),
+            "up": ("experts", "embed", "expert_mlp"),
+            "down": ("experts", "expert_mlp", "embed"),
+        }
+        return bank, s
+
+    params["experts"], specs["experts"] = expert_bank(ks[1])
+    if cfg.n_shared:
+        # shared experts act as one dense SwiGLU FFN of width n_shared * f
+        from repro.models.transformer import ffn_init
+        params["shared"], specs["shared"] = ffn_init(
+            ks[2], d_model, cfg.n_shared * f, act="swiglu", dtype=dtype)
+    return params, specs
+
+
+def moe_apply(params, x, cfg: MoeCfg):
+    """x: (B, S, D) -> (B, S, D), aux load-balance loss.
+
+    With ``cfg.local_groups = G > 1``, routing/dispatch/combine run
+    independently over G token groups (vmapped leading dim, sharded over the
+    data axis) with capacity C/G each, so the cumsum/scatter machinery never
+    crosses devices — only the expert matmuls see the model axis.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_routed, cfg.top_k
+    cap = max(1, int(t * k / e * cfg.capacity_factor))
+    g = cfg.local_groups if cfg.local_groups and t % cfg.local_groups == 0 \
+        else 1
+    xt = x.reshape(g, t // g, d)
+    dispatch = jax.vmap(
+        lambda xg: _dispatch_group(params, xg, cfg, cap // g))
+    y, aux = dispatch(xt)
+
+    y = y.reshape(t, d)
+    if "shared" in params:
+        from repro.models.transformer import ffn_apply
+        y = y + ffn_apply(params["shared"], x.reshape(t, d), act="swiglu")
+    return y.reshape(b, s, d), aux.mean()
+
+
+def _dispatch_group(params, xt, cfg: MoeCfg, cap: int):
+    """Capacity-based dispatch for one token group. xt: (T, D)."""
+    t, d = xt.shape
+    e, k = cfg.n_routed, cfg.top_k
+    cap = max(1, cap)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, k)                  # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(0)                                        # (E,)
+    ce = jnp.zeros((e,)).at[ids.reshape(-1)].add(1.0) / (t * k)
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+
+    flat_ids = ids.reshape(-1)                                # (T*k,)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)     # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                 # pos in expert
+    pos_in_e = jnp.take_along_axis(
+        pos, flat_ids[:, None], axis=1)[:, 0]                 # (T*k,)
+    keep = pos_in_e < cap
+    # clamp dropped assignments to slot 0 of a scratch row; zero their gate
+    safe_pos = jnp.where(keep, pos_in_e, 0)
+    gates_flat = jnp.where(keep, gate_vals.reshape(-1), 0.0)
+
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    # dropped tokens scatter with weight 0 via a separate mask-multiply:
+    contrib = jnp.where(keep[:, None], xt[token_idx], 0)
+    buf = buf.at[flat_ids, safe_pos].add(contrib)
+
+    w = params["experts"]
+    h = swiglu_combine(
+        jnp.einsum("ecd,edf->ecf", buf, w["gate"].astype(buf.dtype)),
+        jnp.einsum("ecd,edf->ecf", buf, w["up"].astype(buf.dtype)))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w["down"].astype(h.dtype))
+
+    gathered = out_buf[flat_ids, safe_pos]                    # (T*k, D)
+    y = jnp.zeros((t, d), xt.dtype).at[token_idx].add(
+        gathered * gates_flat[:, None].astype(xt.dtype))
+    return y, aux

@@ -1,0 +1,447 @@
+"""Transformer building blocks: GQA attention (RoPE/M-RoPE, sliding window,
+KV/ring caches), dense FFN (SwiGLU / GELU), pre-norm blocks, scanned stacks.
+
+Attention impls:
+  * ``einsum``    — materialized scores, for short sequences / smoke tests;
+  * ``xla_flash`` — chunked online-softmax attention in pure jnp (lax.scan
+    over KV chunks), O(S * chunk) memory: the XLA-level mirror of the Pallas
+    flash kernel, used for long sequences and under SPMD where the Pallas
+    path is TPU-only;
+  * ``pallas``    — the Pallas kernel (TPU target).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    apply_dense, apply_norm, cast, dense_init, gelu, mrope, norm_init,
+    rope, swiglu_combine,
+)
+
+__all__ = [
+    "AttnArgs", "attn_init", "attn_apply", "init_kv_cache",
+    "ffn_init", "ffn_apply", "block_init", "block_apply",
+    "stack_init", "stack_apply",
+]
+
+NEG = -1e30
+
+
+# ============================================================== attention ==
+@dataclasses.dataclass(frozen=True)
+class AttnArgs:
+    n_heads: int
+    n_kv: int
+    hd: int
+    causal: bool = True
+    rope_theta: float = 1e6
+    rotary_pct: float = 1.0
+    use_rope: bool = True
+    mrope_sections: tuple[int, int, int] | None = None
+    sliding_window: int | None = None
+    impl: str = "auto"        # einsum | xla_flash | pallas | auto
+
+
+def attn_init(key, d_model: int, a: AttnArgs, *, qkv_bias=False,
+              dtype=jnp.bfloat16, cross=False):
+    ks = jax.random.split(key, 4)
+    pq, sq = dense_init(ks[0], d_model, (a.n_heads, a.hd),
+                        ("embed", "heads", "head"), bias=qkv_bias,
+                        dtype=dtype)
+    pk, sk = dense_init(ks[1], d_model, (a.n_kv, a.hd),
+                        ("embed", "kv_heads", "head"), bias=qkv_bias,
+                        dtype=dtype)
+    pv, sv = dense_init(ks[2], d_model, (a.n_kv, a.hd),
+                        ("embed", "kv_heads", "head"), bias=qkv_bias,
+                        dtype=dtype)
+    # output proj: (H, hd, d) contracted over (H, hd)
+    w_o = (jax.random.normal(ks[3], (a.n_heads, a.hd, d_model), jnp.float32)
+           / math.sqrt(a.n_heads * a.hd)).astype(dtype)
+    params = {"q": pq, "k": pk, "v": pv, "o": {"w": w_o}}
+    specs = {"q": sq, "k": sk, "v": sv,
+             "o": {"w": ("heads", "head", "embed")}}
+    return params, specs
+
+
+def init_kv_cache(batch: int, max_len: int, a: AttnArgs, dtype,
+                  *, ring: bool = False, quant: bool = False):
+    """Decode cache. ``ring=True`` -> sliding-window ring buffer.
+    ``quant=True`` -> int8 K/V with per-(token, head) f32 scales: halves
+    the decode memory term (decode reads the whole cache every step)."""
+    size = min(max_len, a.sliding_window) if (ring and a.sliding_window) \
+        else max_len
+    kv_dtype = jnp.int8 if quant else dtype
+    cache = {
+        "k": jnp.zeros((batch, size, a.n_kv, a.hd), kv_dtype),
+        "v": jnp.zeros((batch, size, a.n_kv, a.hd), kv_dtype),
+        # absolute position stored per slot (ring); -1 = empty
+        "slot_pos": jnp.full((size,), -1, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if quant:
+        cache["k_scale"] = jnp.zeros((batch, size, a.n_kv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, size, a.n_kv), jnp.float32)
+    return cache
+
+
+def _kv_quantize(x):
+    """(B, 1, KV, hd) -> int8 values + per-head scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q, scale):
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def _is_ring(cache, a: AttnArgs) -> bool:
+    # the cache is a ring buffer iff it is smaller than what unbounded
+    # attention would need, which only happens with a sliding window
+    return (a.sliding_window is not None
+            and cache["k"].shape[1] <= a.sliding_window)
+
+
+def _apply_rope(x, positions, pos3, a: AttnArgs):
+    if not a.use_rope:
+        return x
+    if a.mrope_sections is not None and pos3 is not None:
+        return mrope(x, pos3, theta=a.rope_theta, sections=a.mrope_sections)
+    return rope(x, positions, theta=a.rope_theta, rotary_pct=a.rotary_pct)
+
+
+def _gqa_scores(q, k):
+    """q (B,S,H,D), k (B,T,KV,D) -> scores (B,KV,G,S,T) without repeat."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k)
+
+
+def _gqa_out(p, v):
+    """p (B,KV,G,S,T), v (B,T,KV,D) -> (B,S,H,D)."""
+    b, kv, g, s, t = p.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(b, s, kv * g, v.shape[-1])
+
+
+def _einsum_attn(q, k, v, mask, scale):
+    s = _gqa_scores(q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _xla_flash(q, k, v, scale, *, causal, window, q_chunk=512,
+               kv_chunk=1024):
+    """Chunked online-softmax attention in pure jnp (differentiable).
+
+    Under ``flags.UNROLL`` (dry-run cost compiles) the chunk loops become
+    python loops with fully-masked causal blocks skipped — flops are
+    chunk-size invariant, so this is the loop-free twin XLA can cost.
+    """
+    from repro.models import flags
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    if flags.UNROLL:
+        # fewer, larger chunks bound the unrolled HLO size
+        q_chunk = max(q_chunk, s // 8)
+        kv_chunk = max(kv_chunk, t // 8)
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    nq = -(-s // qc)
+    nk = -(-t // kc)
+    sp = nq * qc - s
+    tp = nk * kc - t
+    qq = jnp.pad(q, ((0, 0), (0, sp), (0, 0), (0, 0))) if sp else q
+    kk = jnp.pad(k, ((0, 0), (0, tp), (0, 0), (0, 0))) if tp else k
+    vv = jnp.pad(v, ((0, 0), (0, tp), (0, 0), (0, 0))) if tp else v
+    qq = qq.reshape(b, nq, qc, kv_heads, g, d)
+    kk = kk.reshape(b, nk, kc, kv_heads, d)
+    vv = vv.reshape(b, nk, kc, kv_heads, d)
+
+    q_pos = jnp.arange(nq * qc, dtype=jnp.int32).reshape(nq, qc)
+    k_pos = jnp.arange(nk * kc, dtype=jnp.int32).reshape(nk, kc)
+    k_valid = (jnp.arange(nk * kc) < t).reshape(nk, kc)
+
+    def kv_update(carry, qb, qp, kb, vb, kp, kval):
+        acc, m, l = carry
+        # matmuls stay in the input dtype with f32 accumulation (MXU-native)
+        # — upcasting q/k/v to f32 before the dot doubles HBM traffic
+        sc = jnp.einsum(
+            "bqkgd,btkd->bkgqt", qb, kb,
+            preferred_element_type=jnp.float32) * scale
+        msk = kval[None, :]
+        if causal:
+            msk = msk & (qp[:, None] >= kp[None, :])
+        if window is not None:
+            msk = msk & (qp[:, None] - kp[None, :] < window)
+        sc = jnp.where(msk[None, None, None], sc, NEG)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l
+
+    def q_step(qb, qp, qi=None):
+        acc = jnp.zeros((b, kv_heads, g, qc, d), jnp.float32)
+        m = jnp.full((b, kv_heads, g, qc), NEG, jnp.float32)
+        l = jnp.zeros((b, kv_heads, g, qc), jnp.float32)
+        if flags.UNROLL:
+            for ki in range(nk):
+                if causal and qi is not None and \
+                        ki * kc > qi * qc + qc - 1:
+                    continue            # fully-masked block: skip (flash)
+                acc, m, l = kv_update(
+                    (acc, m, l), qb, qp, kk[:, ki], vv[:, ki],
+                    k_pos[ki], k_valid[ki])
+        else:
+            def body(carry, ki):
+                return kv_update(carry, qb, qp, *ki), None
+
+            (acc, m, l), _ = jax.lax.scan(
+                body, (acc, m, l),
+                (jnp.moveaxis(kk, 1, 0), jnp.moveaxis(vv, 1, 0),
+                 k_pos, k_valid))
+        out = acc / jnp.maximum(l[..., None], 1e-30)   # (B,KV,G,qc,D)
+        out = jnp.einsum("bkgqd->bqkgd", out).reshape(b, qc, h, d)
+        return out.astype(q.dtype)
+
+    if flags.UNROLL:
+        outs = [q_step(qq[:, qi], q_pos[qi], qi) for qi in range(nq)]
+        out = jnp.stack(outs, axis=1)
+    else:
+        _, outs = jax.lax.scan(
+            lambda _, qi: (None, q_step(qi[0], qi[1])), None,
+            (jnp.moveaxis(qq, 1, 0), q_pos))
+        out = jnp.moveaxis(outs, 0, 1)
+    out = out.reshape(b, nq * qc, h, d)
+    return out[:, :s]
+
+
+def attn_apply(p, x, a: AttnArgs, *, kv_x=None, positions=None, pos3=None,
+               cache=None, compute_dtype=jnp.bfloat16, is_cross=False):
+    """Returns (y, new_cache).  Modes:
+      * cache is None             — full self/cross attention (train/prefill)
+      * cache is not None         — single-token decode step (x: (B,1,D))
+    """
+    b, s, _ = x.shape
+    src = x if kv_x is None else kv_x
+    q = apply_dense(p["q"], x)                     # (B,S,H,hd)
+    scale = a.hd ** -0.5
+
+    if cache is None:
+        k = apply_dense(p["k"], src)
+        v = apply_dense(p["v"], src)
+        if kv_x is None:                           # rope only for self-attn
+            q = _apply_rope(q, positions, pos3, a)
+            k = _apply_rope(k, positions, pos3, a)
+        t = k.shape[1]
+        impl = a.impl
+        if impl == "auto":
+            impl = "xla_flash" if max(s, t) > 1024 else "einsum"
+        if impl == "xla_flash":
+            y = _xla_flash(q, k, v, scale,
+                           causal=a.causal and kv_x is None,
+                           window=a.sliding_window)
+        elif impl == "pallas":
+            from repro.kernels.flash_attention.ops import flash_attention
+            y = flash_attention(
+                jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                jnp.moveaxis(v, 2, 1),
+                causal=a.causal and kv_x is None)
+            y = jnp.moveaxis(y, 1, 2)
+        else:
+            q_pos = jnp.arange(s)
+            k_pos = jnp.arange(t)
+            mask = jnp.ones((s, t), bool)
+            if a.causal and kv_x is None:
+                mask &= q_pos[:, None] >= k_pos[None, :] + (s - t) * 0
+            if a.sliding_window is not None and kv_x is None:
+                mask &= q_pos[:, None] - k_pos[None, :] < a.sliding_window
+            y = _einsum_attn(q, k, v, mask[None, None, None], scale)
+        out = jnp.einsum("bshd,hde->bse", y.astype(jnp.float32),
+                         p["o"]["w"].astype(jnp.float32))
+        return out.astype(compute_dtype), cache
+
+    # ---------------- decode: one token against the cache ----------------
+    assert s == 1
+    cur = cache.get("len")                         # tokens already cached
+    if not is_cross:
+        posq = jnp.full((b, 1), cur, jnp.int32)
+        q = _apply_rope(q, posq, pos3, a)
+        k_new = apply_dense(p["k"], src)
+        v_new = apply_dense(p["v"], src)
+        k_new = _apply_rope(k_new, posq, pos3, a)
+        size = cache["k"].shape[1]
+        slot = cur % size if _is_ring(cache, a) else jnp.minimum(
+            cur, size - 1)
+        quant = "k_scale" in cache
+        if quant:
+            k_q, k_s = _kv_quantize(k_new)
+            v_q, v_s = _kv_quantize(v_new)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_q, slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_q, slot, axis=1)
+            k_sc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], k_s, slot, axis=1)
+            v_sc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], v_s, slot, axis=1)
+            extra = {"k_scale": k_sc, "v_scale": v_sc}
+            k_read = _kv_dequant(kc, k_sc)
+            v_read = _kv_dequant(vc, v_sc)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], cast(k_new, cache["k"].dtype), slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], cast(v_new, cache["v"].dtype), slot, axis=1)
+            extra = {}
+            k_read = kc.astype(jnp.float32)
+            v_read = vc.astype(jnp.float32)
+        slot_pos = cache["slot_pos"].at[slot].set(cur)
+        new_cache = {**cache, "k": kc, "v": vc, "slot_pos": slot_pos,
+                     "len": cur + 1, **extra}
+        valid = (slot_pos >= 0) & (slot_pos <= cur)
+        if a.sliding_window is not None:
+            valid &= cur - slot_pos < a.sliding_window
+        sc = _gqa_scores(q.astype(jnp.float32), k_read) * scale
+        sc = jnp.where(valid[None, None, None, None, :], sc, NEG)
+        pr = jax.nn.softmax(sc, axis=-1)
+        y = _gqa_out(pr, v_read)
+    else:
+        # cross-attention decode: static precomputed K/V in the cache
+        sc = _gqa_scores(q.astype(jnp.float32),
+                         cache["k"].astype(jnp.float32)) * scale
+        pr = jax.nn.softmax(sc, axis=-1)
+        y = _gqa_out(pr, cache["v"].astype(jnp.float32))
+        new_cache = cache
+    out = jnp.einsum("bshd,hde->bse", y, p["o"]["w"].astype(jnp.float32))
+    return out.astype(compute_dtype), new_cache
+
+
+# ==================================================================== ffn ==
+def ffn_init(key, d_model: int, d_ff: int, *, act="swiglu",
+             dtype=jnp.bfloat16, bias=False):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        pg, sg = dense_init(ks[0], d_model, d_ff, ("embed", "mlp"),
+                            dtype=dtype)
+        pu, su = dense_init(ks[1], d_model, d_ff, ("embed", "mlp"),
+                            dtype=dtype)
+        pd, sd = dense_init(ks[2], d_ff, d_model, ("mlp", "embed"),
+                            dtype=dtype)
+        return ({"gate": pg, "up": pu, "down": pd},
+                {"gate": sg, "up": su, "down": sd})
+    pu, su = dense_init(ks[0], d_model, d_ff, ("embed", "mlp"),
+                        bias=bias, dtype=dtype)
+    pd, sd = dense_init(ks[1], d_ff, d_model, ("mlp", "embed"),
+                        bias=bias, dtype=dtype)
+    return {"up": pu, "down": pd}, {"up": su, "down": sd}
+
+
+def ffn_apply(p, x, *, act="swiglu"):
+    if act == "swiglu":
+        h = swiglu_combine(apply_dense(p["gate"], x),
+                           apply_dense(p["up"], x))
+    else:
+        h = gelu(apply_dense(p["up"], x))
+    return apply_dense(p["down"], h)
+
+
+# ================================================================== block ==
+def block_init(key, d_model: int, d_ff: int, a: AttnArgs, *,
+               qkv_bias=False, act="swiglu", norm="rms",
+               dtype=jnp.bfloat16, cross=False, moe_cfg=None):
+    ks = jax.random.split(key, 6)
+    params, specs = {}, {}
+    params["ln1"], specs["ln1"] = norm_init(d_model, kind=norm)
+    params["attn"], specs["attn"] = attn_init(
+        ks[0], d_model, a, qkv_bias=qkv_bias, dtype=dtype)
+    if cross:
+        params["ln_x"], specs["ln_x"] = norm_init(d_model, kind=norm)
+        params["xattn"], specs["xattn"] = attn_init(
+            ks[1], d_model, a, qkv_bias=qkv_bias, dtype=dtype, cross=True)
+    params["ln2"], specs["ln2"] = norm_init(d_model, kind=norm)
+    if moe_cfg is not None:
+        from repro.models.moe import moe_init
+        params["moe"], specs["moe"] = moe_init(
+            ks[2], d_model, moe_cfg, dtype=dtype)
+    else:
+        params["ffn"], specs["ffn"] = ffn_init(
+            ks[2], d_model, d_ff, act=act, dtype=dtype,
+            bias=(norm == "ln"))
+    return params, specs
+
+
+def block_apply(p, x, a: AttnArgs, *, enc_out=None, positions=None,
+                pos3=None, caches=None, act="swiglu", norm="rms",
+                moe_cfg=None, compute_dtype=jnp.bfloat16):
+    """Returns (x, new_caches, aux_loss)."""
+    new_caches = dict(caches) if caches is not None else None
+    h, c = attn_apply(
+        p["attn"], apply_norm(p["ln1"], x, kind=norm), a,
+        positions=positions, pos3=pos3,
+        cache=None if caches is None else caches.get("self"),
+        compute_dtype=compute_dtype)
+    if new_caches is not None:
+        new_caches["self"] = c
+    x = x + h
+    if "xattn" in p:
+        h, c = attn_apply(
+            p["xattn"], apply_norm(p["ln_x"], x, kind=norm),
+            dataclasses.replace(a, causal=False, use_rope=False),
+            kv_x=enc_out, is_cross=True,
+            cache=None if caches is None else caches.get("cross"),
+            compute_dtype=compute_dtype)
+        if new_caches is not None:
+            new_caches["cross"] = c
+        x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    y = apply_norm(p["ln2"], x, kind=norm)
+    if moe_cfg is not None:
+        from repro.models.moe import moe_apply
+        h, aux = moe_apply(p["moe"], y, moe_cfg)
+    else:
+        h = ffn_apply(p["ffn"], y, act=act)
+    return x + h, new_caches, aux
+
+
+# ================================================================== stack ==
+def stack_init(key, n_layers: int, init_one):
+    """Stack homogeneous layers: init each, stack leaves on a leading dim."""
+    keys = jax.random.split(key, n_layers)
+    ps, ss = zip(*(init_one(k) for k in keys))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+    specs = jax.tree_util.tree_map(
+        lambda s: ("layers",) + s, ss[0],
+        is_leaf=lambda s: isinstance(s, tuple) and all(
+            isinstance(e, (str, type(None))) for e in s))
+    return stacked, specs
+
+
+def stack_apply(stacked, x, apply_one, *, remat=True):
+    """lax.scan over the layer dim; apply_one(params_l, x) -> (x, aux)."""
+
+    def body(carry, layer_params):
+        x, aux = carry
+        x, a = apply_one(layer_params, x)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux

@@ -1,0 +1,240 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, recurrent with block-diagonal recurrent weights).
+
+mLSTM uses the stabilized exponential-gating chunkwise algorithm: intra-chunk
+quadratic term + inter-chunk ``lax.scan`` carrying (C, n, m) — same shape of
+computation as the Mamba2 SSD kernel, MXU-friendly.  sLSTM is inherently
+sequential (recurrent R couples h_{t-1}); it runs as a time scan — the
+reason xlstm-350m keeps d_model small.  Decode for both is O(1)-state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XlstmCfg
+from repro.models.common import apply_dense, apply_norm, dense_init, norm_init
+
+__all__ = [
+    "mlstm_init", "mlstm_apply", "mlstm_decode", "init_mlstm_cache",
+    "slstm_init", "slstm_apply", "slstm_decode", "init_slstm_cache",
+]
+
+NEG = -1e30
+
+
+# ================================================================= mLSTM ==
+def mlstm_init(key, d_model: int, cfg: XlstmCfg, *, dtype=jnp.bfloat16):
+    nh = cfg.n_heads
+    d_in = int(cfg.proj_factor * d_model)
+    dh = d_in // nh
+    ks = jax.random.split(key, 8)
+    params, specs = {}, {}
+    params["up"], specs["up"] = dense_init(
+        ks[0], d_model, 2 * d_in, ("embed", "inner"), dtype=dtype)
+    for name, i in [("q", 1), ("k", 2), ("v", 3)]:
+        params[name], specs[name] = dense_init(
+            ks[i], d_in, (nh, dh), ("inner", "heads", "head"), dtype=dtype)
+    params["gates"], specs["gates"] = dense_init(
+        ks[4], d_in, (nh, 2), ("inner", "heads", "gate"),
+        dtype=jnp.float32, bias=True)
+    params["norm"], specs["norm"] = norm_init(d_in, kind="rms")
+    params["down"], specs["down"] = dense_init(
+        ks[5], d_in, d_model, ("inner", "embed"), dtype=dtype)
+    return params, specs
+
+
+def _mlstm_qkvif(params, x, cfg: XlstmCfg):
+    d_in = params["down"]["w"].shape[0]
+    u = apply_dense(params["up"], x)
+    u, z = jnp.split(u, 2, axis=-1)
+    q = apply_dense(params["q"], u)                    # (B,S,NH,DH)
+    k = apply_dense(params["k"], u) / jnp.sqrt(
+        jnp.asarray(q.shape[-1], jnp.float32)).astype(u.dtype)
+    v = apply_dense(params["v"], u)
+    gates = apply_dense(params["gates"], u.astype(jnp.float32))
+    i_raw, f_raw = gates[..., 0], gates[..., 1]        # (B,S,NH)
+    return q, k, v, i_raw, f_raw, z
+
+
+def mlstm_apply(params, x, cfg: XlstmCfg):
+    """x: (B, S, D) -> (B, S, D), chunkwise parallel."""
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvif(params, x, cfg)
+    dh = q.shape[-1]
+    l = min(cfg.chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+
+    def r(t):  # (B,S,...) -> (B,nc,L,...) -> (nc, B, L, ...)
+        return jnp.moveaxis(t.reshape((b, nc, l) + t.shape[2:]), 1, 0)
+
+    qc, kc, vc = r(q.astype(jnp.float32)), r(k.astype(jnp.float32)), r(
+        v.astype(jnp.float32))
+    ic, fc = r(i_raw), r(jax.nn.log_sigmoid(f_raw))
+
+    def chunk_step(carry, inp):
+        c_prev, n_prev, m_prev = carry   # (B,NH,DH,DH),(B,NH,DH),(B,NH)
+        qq, kk, vv, ii, ff = inp
+        fcum = jnp.cumsum(ff, axis=1)                  # (B,L,NH) inclusive
+        # log-weights within chunk: w[i,j] = fcum_i - fcum_j + ii_j, j<=i
+        w = (fcum[:, :, None, :] - fcum[:, None, :, :]
+             + ii[:, None, :, :])                      # (B,L,L,NH)
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        w = jnp.where(mask[None, :, :, None], w, NEG)
+        w_carry = m_prev[:, None, :] + fcum            # (B,L,NH) state path
+        m_i = jnp.maximum(w.max(axis=2), w_carry)      # (B,L,NH)
+        d = jnp.exp(w - m_i[:, :, None, :])            # (B,L,L,NH)
+        carry_scale = jnp.exp(w_carry - m_i)           # (B,L,NH)
+
+        qk = jnp.einsum("blhd,bjhd->bljh", qq, kk)     # (B,L,L,NH)
+        num = (jnp.einsum("bljh,bjhd->blhd", d * qk, vv)
+               + jnp.einsum("blhd,bhde,blh->blhe", qq, c_prev,
+                            carry_scale))
+        nvec = (jnp.einsum("bljh,bjhd->blhd", d, kk)
+                + n_prev[:, None] * carry_scale[..., None])
+        qn = jnp.abs(jnp.einsum("blhd,blhd->blh", qq, nvec))
+        denom = jnp.maximum(qn, jnp.exp(-m_i))
+        h = num / denom[..., None]                     # (B,L,NH,DH)
+
+        # carry update to end of chunk
+        f_total = fcum[:, -1]                          # (B,NH)
+        m_new = jnp.maximum(m_prev + f_total,
+                            (f_total[:, None] - fcum + ii).max(axis=1))
+        kv_scale = jnp.exp(f_total[:, None] - fcum + ii
+                           - m_new[:, None])           # (B,L,NH)
+        c_new = (c_prev * jnp.exp(m_prev + f_total - m_new)[..., None,
+                                                            None]
+                 + jnp.einsum("blh,blhd,blhe->bhde", kv_scale, kk, vv))
+        n_new = (n_prev * jnp.exp(m_prev + f_total - m_new)[..., None]
+                 + jnp.einsum("blh,blhd->bhd", kv_scale, kk))
+        return (c_new, n_new, m_new), h
+
+    c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    m0 = jnp.full((b, nh), 0.0, jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, (c0, n0, m0), (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh * dh)  # (B,S,d_in)
+    h = apply_norm(params["norm"], h.astype(x.dtype))
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return apply_dense(params["down"], h)
+
+
+def init_mlstm_cache(batch: int, d_model: int, cfg: XlstmCfg, dtype):
+    nh = cfg.n_heads
+    dh = int(cfg.proj_factor * d_model) // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.zeros((batch, nh), jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, cache, cfg: XlstmCfg):
+    b = x.shape[0]
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvif(params, x, cfg)
+    q1 = q[:, 0].astype(jnp.float32)                   # (B,NH,DH)
+    k1 = k[:, 0].astype(jnp.float32)
+    v1 = v[:, 0].astype(jnp.float32)
+    ii, ff = i_raw[:, 0], jax.nn.log_sigmoid(f_raw[:, 0])
+    m_new = jnp.maximum(ff + cache["m"], ii)
+    f_s = jnp.exp(ff + cache["m"] - m_new)[..., None]
+    i_s = jnp.exp(ii - m_new)[..., None]
+    c_new = (cache["C"] * f_s[..., None]
+             + i_s[..., None] * k1[..., :, None] * v1[..., None, :])
+    n_new = cache["n"] * f_s + i_s * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, c_new)
+    qn = jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n_new))
+    denom = jnp.maximum(qn, jnp.exp(-m_new))
+    h = (num / denom[..., None]).reshape(b, 1, -1)
+    h = apply_norm(params["norm"], h.astype(x.dtype))
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return apply_dense(params["down"], h), {
+        "C": c_new, "n": n_new, "m": m_new}
+
+
+# ================================================================= sLSTM ==
+def slstm_init(key, d_model: int, cfg: XlstmCfg, *, dtype=jnp.bfloat16):
+    nh = cfg.n_heads
+    dh = d_model // nh
+    ks = jax.random.split(key, 4)
+    params, specs = {}, {}
+    # input weights for 4 gates (z, i, f, o)
+    params["w"], specs["w"] = dense_init(
+        ks[0], d_model, (4, nh, dh), ("embed", "gate", "heads", "head"),
+        dtype=jnp.float32, bias=True)
+    # block-diagonal recurrent weights per head
+    params["r"] = (jax.random.normal(ks[1], (4, nh, dh, dh))
+                   / jnp.sqrt(dh)).astype(jnp.float32)
+    specs["r"] = ("gate", "heads", "head", "head2")
+    params["norm"], specs["norm"] = norm_init(d_model, kind="rms")
+    d_ff = int(cfg.ff_factor * d_model)
+    params["ff_up"], specs["ff_up"] = dense_init(
+        ks[2], d_model, 2 * d_ff, ("embed", "mlp"), dtype=dtype)
+    params["ff_down"], specs["ff_down"] = dense_init(
+        ks[3], d_ff, d_model, ("mlp", "embed"), dtype=dtype)
+    return params, specs
+
+
+def _slstm_cell(params, wx_t, state):
+    """One recurrence step.  wx_t: (B,4,NH,DH) precomputed input part."""
+    c, n, m, h = state                                 # (B,NH,DH) x3 + h
+    rh = jnp.einsum("gheo,bhe->bgho", params["r"], h)
+    pre = wx_t + rh                                    # (B,4,NH,DH)
+    z = jnp.tanh(pre[:, 0])
+    i_raw = pre[:, 1]
+    f_raw = pre[:, 2]
+    o = jax.nn.sigmoid(pre[:, 3])
+    flog = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(flog + m, i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(flog + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(params, x, cfg: XlstmCfg):
+    """x: (B,S,D) -> (B,S,D); sequential scan over time."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    wx = apply_dense(params["w"], x.astype(jnp.float32))  # (B,S,4,NH,DH)
+    state = init_slstm_cache(b, d, cfg, x.dtype)
+    state = (state["c"], state["n"], state["m"], state["h"])
+
+    def step(st, wx_t):
+        return _slstm_cell(params, wx_t, st)
+
+    _, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    h = apply_norm(params["norm"], h)
+    # GeGLU post-FFN (factor 4/3)
+    u = apply_dense(params["ff_up"], h)
+    u, g = jnp.split(u, 2, axis=-1)
+    y = apply_dense(params["ff_down"],
+                    u * jax.nn.gelu(g.astype(jnp.float32)).astype(u.dtype))
+    return y
+
+
+def init_slstm_cache(batch: int, d_model: int, cfg: XlstmCfg, dtype):
+    nh = cfg.n_heads
+    dh = d_model // nh
+    zero = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": zero, "n": zero, "m": zero, "h": zero}
+
+
+def slstm_decode(params, x, cache, cfg: XlstmCfg):
+    b, _, d = x.shape
+    wx = apply_dense(params["w"], x.astype(jnp.float32))[:, 0]
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    state, h = _slstm_cell(params, wx, state)
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    h = apply_norm(params["norm"], h)
+    u = apply_dense(params["ff_up"], h)
+    u, g = jnp.split(u, 2, axis=-1)
+    y = apply_dense(params["ff_down"],
+                    u * jax.nn.gelu(g.astype(jnp.float32)).astype(u.dtype))
+    return y, {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}

@@ -1,0 +1,63 @@
+"""AdamW with mixed precision + ZeRO-1-shardable state.
+
+State: fp32 master weights + first/second moments.  Model params may be
+bf16; the update happens in fp32 and is cast back.  The sharding layer
+(``zero1_sharding``) additionally shards these fp32 leaves over the data
+axis — the ZeRO-1 memory optimization — because they are touched only at
+the optimizer step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "global_norm"]
+
+
+def adamw_init(params):
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": f32(params),
+        "mu": zeros(params),
+        "nu": zeros(params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - b2 ** step.astype(jnp.float32))
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+        return m, v, w
+
+    out = jax.tree_util.tree_map(
+        upd, grads, state["mu"], state["nu"], state["master"])
+    mu = jax.tree_util.tree_map(lambda t: t[0], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree_util.tree_map(
+        lambda w, p: w.astype(p.dtype), master, params)
+    new_state = {"step": step, "master": master, "mu": mu, "nu": nu}
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (
+    RooflineReport, analyze_compiled, collective_bytes, parse_hlo_shapes,
+)
+
+__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes",
+           "parse_hlo_shapes"]

@@ -1,0 +1,188 @@
+"""Three-term roofline from a compiled (AOT) executable.
+
+    compute term    = HLO_FLOPs_total   / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes_total   / (chips * HBM_bw)
+    collective term = collective_bytes  / (chips * link_bw)
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-device*
+flops/bytes, so totals are per-device x chips (the two conventions cancel in
+the terms — documented here because it is easy to double-count).
+
+``collective_bytes`` is not in cost_analysis: we parse the optimized HLO and
+sum bytes moved per device per op under a ring model:
+    all-reduce          2 * size * (n-1)/n      (reduce-scatter + all-gather)
+    all-gather          size * (n-1)/n          (size = gathered result)
+    reduce-scatter      size * (n-1)            (size = scattered result)
+    all-to-all          size * (n-1)/n
+    collective-permute  size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.core.costmodel import TpuV5e
+
+__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes",
+           "parse_hlo_shapes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ``%name = TYPE[SHAPE] op-name(...)`` — optimized HLO text
+_INSTR_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_hlo_shapes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> dict[str, float]:
+    """Per-device bytes moved, per collective kind (ring model)."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        size = parse_hlo_shapes(m.group(1))
+        kind = m.group(2)
+        n = max(2, _group_size(line, n_devices))
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            moved = 2 * size * frac
+        elif kind == "all-gather":
+            moved = size * frac                 # size = gathered result
+        elif kind == "reduce-scatter":
+            moved = size * (n - 1)              # size = scattered shard
+        elif kind == "all-to-all":
+            moved = size * frac
+        else:                                   # collective-permute
+            moved = size
+        out[kind] += moved
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    peak_memory_bytes: float | None = None
+    model_flops: float | None = None          # 6*N*D (active N for MoE)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfect-overlap) step time = max of the terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float | None:
+        """MODEL_FLOPS / HLO_FLOPs_total (remat/redundancy waste)."""
+        if not self.model_flops:
+            return None
+        return self.model_flops / max(self.flops_per_device * self.chips,
+                                      1.0)
+
+    @property
+    def mfu(self) -> float | None:
+        """Model-flops utilization at the optimistic step time."""
+        if not self.model_flops:
+            return None
+        hw = TpuV5e()
+        return self.model_flops / (
+            self.step_time_s * self.chips * hw.peak_flops_bf16)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_dev": self.flops_per_device,
+            "bytes_dev": self.bytes_per_device,
+            "coll_bytes_dev": self.coll_bytes_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_frac": self.useful_flops_frac,
+            "mfu_opt": self.mfu,
+            "peak_mem_gb": (self.peak_memory_bytes or 0) / 2**30,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float | None = None,
+                     hw: TpuV5e | None = None) -> RooflineReport:
+    hw = hw or TpuV5e()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):            # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, chips)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes)
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=nbytes,
+        coll_bytes_per_device=coll["total"], coll_breakdown=coll,
+        compute_s=flops / hw.peak_flops_bf16,
+        memory_s=nbytes / hw.hbm_bytes_per_s,
+        collective_s=coll["total"] / hw.ici_link_bytes_per_s,
+        peak_memory_bytes=mem, model_flops=model_flops,
+    )

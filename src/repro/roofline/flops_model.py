@@ -1,0 +1,135 @@
+"""Analytic flops inventory per (arch x shape) cell.
+
+Forward-pass matmul flops summed per op (2*M*N*K convention, causal scores
+halved), scaled for training (x4 with remat: fwd + recompute + 2x bwd; the
+un-rematted lm_head costs x3).  Used to
+  * validate the unrolled-HLO cost compiles (dense families agree within
+    ~15%), and
+  * supply the compute term for the recurrent cores (Mamba2 SSD, xLSTM)
+    whose chunk scans XLA costs only once even in the unrolled stacks.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeCfg
+
+__all__ = ["analytic_flops"]
+
+
+def _dense_layer(cfg, b, s, *, causal=True, cross_len=0):
+    t = b * s
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    f = 2 * t * d * (hq + 2 * hkv) * hd / (hq * hd) * (hq * hd)  # qkv
+    f = 2 * t * d * (hq + 2 * hkv) * hd                          # qkv
+    f += 2 * t * hq * hd * d                                     # o proj
+    f += 4 * b * s * s * hq * hd * (0.5 if causal else 1.0)      # scores+pv
+    if cross_len:
+        f += 4 * b * s * cross_len * hq * hd
+        f += 2 * t * d * (hq + 2 * hkv) * hd + 2 * t * hq * hd * d
+    if cfg.moe is not None:
+        m = cfg.moe
+        f += 2 * t * d * m.n_routed                              # router
+        eff = t * m.top_k * m.capacity_factor
+        f += 2 * eff * d * m.d_expert * 3                        # routed
+        f += 2 * t * d * (3 * m.n_shared * m.d_expert)           # shared
+    elif cfg.d_ff:
+        mats = 3 if cfg.act == "swiglu" else 2
+        f += 2 * t * d * cfg.d_ff * mats
+    return f
+
+
+def _mamba_layer(cfg, b, s):
+    t = b * s
+    d = cfg.d_model
+    c = cfg.ssm
+    di = c.expand * d
+    h = di // c.head_p
+    n, p, q = c.state, c.head_p, c.chunk
+    f = 2 * t * d * (2 * di + 2 * n + h)            # in projections
+    f += 2 * t * (di + 2 * n) * c.conv              # depthwise conv
+    # SSD: intra-chunk (causal half) + chunk states + inter contribution
+    f += 2 * t * (0.5 * q * (h * p + n + h) + 2 * n * h * p)
+    f += 2 * t * di * d                             # out proj
+    return f
+
+
+def _mlstm_layer(cfg, b, s):
+    t = b * s
+    d = cfg.d_model
+    x = cfg.xlstm
+    di = int(x.proj_factor * d)
+    dh = di // x.n_heads
+    l = x.chunk
+    f = 2 * t * d * 2 * di                          # up
+    f += 3 * 2 * t * di * di // x.n_heads * x.n_heads  # qkv (= 3*2*t*di*dh*nh)
+    f += 2 * t * (0.5 * l * di * 2)                 # intra qk + pv
+    f += 2 * t * dh * dh * x.n_heads / max(l, 1) * 4   # carry updates
+    f += 2 * t * di * dh                            # state read/normalizer
+    f += 2 * t * di * d                             # down
+    return f
+
+
+def _slstm_layer(cfg, b, s):
+    t = b * s
+    d = cfg.d_model
+    x = cfg.xlstm
+    dh = d // x.n_heads
+    dff = int(x.ff_factor * d)
+    f = 2 * t * d * 4 * d                           # input gates
+    f += 2 * t * 4 * d * dh                         # recurrent (blockdiag)
+    f += 2 * t * (d * 2 * dff + dff * d)            # GeGLU FFN
+    return f
+
+
+def analytic_flops(cfg: ArchConfig, shape: ShapeCfg) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        # one token against the cache: projections + cache-length attention
+        # / O(1) state updates; tiny next to train/prefill
+        s_eff = 1
+    else:
+        s_eff = s
+    t = b * s_eff
+    head = 2 * t * cfg.d_model * cfg.vocab_size
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        layer = _dense_layer(cfg, b, s_eff)
+        if shape.kind == "decode":
+            layer += 4 * b * s * cfg.n_heads * cfg.hd   # cache attention
+        total_layers = layer * cfg.n_layers
+    elif fam == "hybrid":
+        every = cfg.ssm.shared_attn_every
+        n_shared = cfg.n_layers // every
+        win = (min(cfg.sliding_window or s, s))
+        shared = _dense_layer(cfg, b, s_eff, causal=True)
+        if shape.kind == "decode":
+            shared += 4 * b * win * cfg.n_heads * cfg.hd
+        total_layers = (_mamba_layer(cfg, b, s_eff) * cfg.n_layers
+                        + shared * n_shared)
+    elif fam == "ssm":
+        pat = cfg.xlstm.pattern
+        per_group = sum(
+            _mlstm_layer(cfg, b, s_eff) if k == "mlstm"
+            else _slstm_layer(cfg, b, s_eff) for k in pat)
+        total_layers = per_group * (cfg.n_layers // len(pat))
+    elif fam == "audio":
+        sd = max(1, s_eff // cfg.encdec.dec_ratio)
+        enc = _dense_layer(cfg, b, s, causal=False) \
+            * cfg.encdec.n_enc_layers
+        dec = _dense_layer(cfg, b, sd if shape.kind != "decode" else 1,
+                           cross_len=s) * cfg.encdec.n_dec_layers
+        if shape.kind == "decode":
+            enc = 0.0                      # encoder ran at prefill
+            dec += 4 * b * s * cfg.n_heads * cfg.hd \
+                * cfg.encdec.n_dec_layers
+            head = 2 * b * cfg.d_model * cfg.vocab_size
+        else:
+            head = 2 * b * sd * cfg.d_model * cfg.vocab_size
+        total_layers = enc + dec
+    else:
+        raise ValueError(fam)
+
+    if shape.kind == "train":
+        factor = 4.0 if cfg.remat else 3.0
+        return total_layers * factor + head * 3.0
+    return total_layers + head

@@ -1,0 +1,3 @@
+from repro.runtime.supervisor import StragglerMonitor, Supervisor, TrainLoop
+
+__all__ = ["StragglerMonitor", "Supervisor", "TrainLoop"]

@@ -1,0 +1,153 @@
+"""Fault-tolerant training runtime.
+
+``TrainLoop`` owns one training run: jitted step, data source, async
+checkpointing, straggler monitor.  ``Supervisor`` wraps it with
+restart-on-failure: any exception (device loss, injected fault, OOM)
+triggers restore-from-latest-checkpoint and resumption — the single-process
+mirror of a pod-level controller that re-schedules failed workers.  Elastic
+scaling falls out of mesh-agnostic checkpoints: on restart the loop may be
+rebuilt with a different mesh/device count and the checkpoint reshards.
+
+``StragglerMonitor`` keeps an EWMA of step wall-time and flags outliers
+(> ``threshold`` x EWMA).  On a real fleet the flag feeds the controller
+(demote/replace the slow host); here it is surfaced in metrics and tested
+with an injected delay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+from repro.checkpoint.ckpt import (
+    AsyncCheckpointer, latest_step, load_checkpoint,
+)
+from repro.data.pipeline import DataState
+
+__all__ = ["StragglerMonitor", "TrainLoop", "Supervisor"]
+
+
+class StragglerMonitor:
+    def __init__(self, *, alpha: float = 0.1, threshold: float = 2.0,
+                 warmup: int = 3):
+        self.alpha, self.threshold, self.warmup = alpha, threshold, warmup
+        self.ewma: float | None = None
+        self.count = 0
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = (self.count > self.warmup
+                        and dt > self.threshold * self.ewma)
+        if is_straggler:
+            self.flagged.append((step, dt))
+        else:
+            # stragglers don't update the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    step_fn: Callable            # (params, opt_state, batch) -> (p, o, metrics)
+    params: object
+    opt_state: object
+    source: object               # .get(DataState) -> (batch, DataState)
+    ckpt_dir: str
+    ckpt_every: int = 50
+    shardings: tuple | None = None     # (param_sh, opt_sh) for restore
+    monitor: StragglerMonitor = dataclasses.field(
+        default_factory=StragglerMonitor)
+
+    def __post_init__(self):
+        self.data_state = DataState()
+        self.step = 0
+        self.ckptr = AsyncCheckpointer(self.ckpt_dir)
+
+    # ------------------------------------------------------------ restore
+    def try_restore(self) -> bool:
+        last = latest_step(self.ckpt_dir)
+        if last is None:
+            return False
+        tree = {"params": self.params, "opt": self.opt_state}
+        sh = (None if self.shardings is None else
+              {"params": self.shardings[0], "opt": self.shardings[1]})
+        restored, md = load_checkpoint(self.ckpt_dir, last, tree,
+                                       shardings=sh)
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.data_state = DataState.from_metadata(md)
+        self.step = last
+        return True
+
+    def checkpoint(self):
+        self.ckptr.save(
+            self.step, {"params": self.params, "opt": self.opt_state},
+            metadata=self.data_state.as_metadata())
+
+    # --------------------------------------------------------------- run
+    def run(self, n_steps: int, *, hooks=(), log_every: int = 10):
+        metrics_hist = []
+        while self.step < n_steps:
+            batch, next_state = self.source.get(self.data_state)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics)
+            dt = time.perf_counter() - t0
+            self.step += 1
+            self.data_state = next_state
+            straggler = self.monitor.observe(self.step, dt)
+            for h in hooks:
+                h(self, metrics, dt, straggler)
+            if self.step % log_every == 0 or self.step == n_steps:
+                loss = float(metrics.get("loss", float("nan")))
+                print(f"step {self.step:6d} loss {loss:.4f} "
+                      f"{dt*1e3:7.1f} ms"
+                      + ("  [STRAGGLER]" if straggler else ""),
+                      flush=True)
+            metrics_hist.append(
+                {k: float(v) for k, v in metrics.items()})
+            if self.step % self.ckpt_every == 0:
+                self.checkpoint()
+        self.ckptr.wait()
+        return metrics_hist
+
+
+class Supervisor:
+    """Restart-on-failure wrapper (checkpoint/restart fault tolerance)."""
+
+    def __init__(self, build_loop: Callable[[], TrainLoop],
+                 *, max_restarts: int = 3):
+        self.build_loop = build_loop
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def run(self, n_steps: int, **kw):
+        while True:
+            loop = self.build_loop()
+            resumed = loop.try_restore()
+            if resumed:
+                print(f"[supervisor] resumed from step {loop.step}",
+                      flush=True)
+            try:
+                return loop.run(n_steps, **kw)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                try:
+                    # drain in-flight async checkpoint writes so the
+                    # restarted loop sees the latest complete checkpoint
+                    loop.ckptr.wait()
+                except Exception:
+                    pass
+                print(f"[supervisor] step failed ({e!r}); "
+                      f"restart {self.restarts}/{self.max_restarts}",
+                      flush=True)

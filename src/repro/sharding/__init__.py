@@ -1,0 +1,7 @@
+from repro.sharding.rules import (
+    RULES, batch_specs, cache_specs, param_shardings, resolve_leaf,
+    zero1_sharding,
+)
+
+__all__ = ["RULES", "batch_specs", "cache_specs", "param_shardings",
+           "resolve_leaf", "zero1_sharding"]

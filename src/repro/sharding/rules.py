@@ -1,0 +1,236 @@
+"""Logical-axis -> mesh-axis sharding rules (divisibility-aware).
+
+Model code annotates every parameter dim with a logical name (see
+``repro.models.common``); this module resolves those names against a mesh:
+
+  * a dim is sharded on its rule's mesh axis only when evenly divisible —
+    head counts like 9 (smollm) or 20 (whisper) silently fall back to
+    replicated instead of tripping XLA;
+  * at most one dim per array uses a given mesh axis (first match by
+    priority wins — e.g. MoE expert banks prefer true EP on ``experts``
+    (moonshot 64e % 16 == 0) and fall back to tensor-sharding
+    ``expert_mlp`` (qwen2-moe 60e));
+  * the batch dim of activations/caches shards over (pod, data), falling
+    back to sequence sharding when the batch is too small (long_500k b=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["RULES", "resolve_leaf", "param_shardings", "batch_specs",
+           "cache_specs", "zero1_sharding"]
+
+# priority-ordered logical-axis rules: first divisible match per mesh axis
+RULES: dict[str, str | None] = {
+    "experts": "model",       # EP when expert count divides
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert_mlp": "model",    # fallback TP inside experts
+    "inner": "model",         # mamba/xlstm inner projections
+    "ssm_heads": "model",
+    "vocab": "model",
+    "embed": None,
+    "head": None, "head2": None,
+    "state": None, "conv_k": None,
+    "gate": None, "experts_r": None,
+    "layers": None,
+}
+# resolution priority when several dims of one array map to "model"
+_PRIORITY = ["experts", "heads", "kv_heads", "mlp", "expert_mlp", "inner",
+             "ssm_heads", "vocab"]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+# logical axes allowed to shard UNEVENLY (XLA pad-shards them).  Replicating
+# an indivisible dim wastes compute axis-size-fold (e.g. 40 attention heads
+# on a 16-way model axis run 16x redundantly); pad-sharding wastes only
+# ceil/exact (48/40 = 1.2x).  Opt-in per axis — the qwen2.5/yi hillclimb.
+UNEVEN_OK: set[str] = set()
+
+
+def _model_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All mesh axes carrying model parallelism ('model', 'model_b', ...)."""
+    return tuple(a for a in mesh.shape if str(a).startswith("model"))
+
+
+def resolve_leaf(axes: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Logical axes tuple + concrete shape -> PartitionSpec.
+
+    A rule targeting 'model' expands to the mesh's model axes and the dim
+    is placed on the *longest divisible prefix*: on a factored
+    (model=8, model_b=2) mesh, d_ff (divisible by 16) shards over both,
+    40 heads shard 8-way over 'model' alone instead of replicating.
+    """
+    assert len(axes) == len(shape), (axes, shape)
+    chosen: dict[int, Any] = {}
+    used_mesh_axes: set = set()
+    model_axes = _model_axes(mesh)
+    # walk logical dims in global priority order
+    order = sorted(
+        range(len(axes)),
+        key=lambda i: _PRIORITY.index(axes[i])
+        if axes[i] in _PRIORITY else 99,
+    )
+    for i in order:
+        rule = RULES.get(axes[i])
+        if rule is None:
+            continue
+        expanded = model_axes if rule == "model" else (rule,)
+        expanded = tuple(a for a in expanded if a not in used_mesh_axes)
+        # longest divisible prefix
+        for end in range(len(expanded), 0, -1):
+            cand = expanded[:end]
+            n = _axis_size(mesh, cand)
+            if n > 1 and shape[i] % n == 0:
+                chosen[i] = cand if len(cand) > 1 else cand[0]
+                used_mesh_axes.update(cand)
+                break
+    return P(*(chosen.get(i) for i in range(len(axes))))
+
+
+def param_shardings(specs, shapes, mesh: Mesh):
+    """specs tree (logical-axis tuples) + eval_shape tree -> NamedShardings."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree_util.tree_map(
+        lambda ax, sh: NamedSharding(mesh, resolve_leaf(ax, sh.shape, mesh)),
+        specs, shapes, is_leaf=is_axes)
+
+
+def _dp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def batch_specs(batch_tree, mesh: Mesh, *, seq_axis_fallback=True):
+    """Shard dim0 (batch) over (pod, data); if indivisible, try dim1 (seq).
+
+    Works on a pytree of ShapeDtypeStructs or arrays.
+    """
+    dp = _dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+
+    def leaf(x):
+        shape = x.shape
+        if not shape:
+            return NamedSharding(mesh, P())
+        if shape[0] % dp_size == 0 and shape[0] >= dp_size:
+            return NamedSharding(mesh, P(dp, *(None,) * (len(shape) - 1)))
+        if (seq_axis_fallback and len(shape) > 1
+                and shape[1] % dp_size == 0):
+            return NamedSharding(
+                mesh, P(None, dp, *(None,) * (len(shape) - 2)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(leaf, batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh, *, seq_shard: bool = False,
+                batch_match: int | None = None):
+    """Decode-cache shardings.
+
+    Legacy mode (``batch_match=None``): assumes attention-style leaves
+    (L, B, S, KV, hd) — batch dim 1 over (pod, data), KV heads (or, with
+    ``seq_shard``, the seq dim) over model.
+
+    ``batch_match=B``: generalized — the first dim equal to the global
+    batch shards over (pod, data) *whatever the leaf layout* (SSM states,
+    conv states, xLSTM matrix memories are stacked with varying leading
+    dims), then the largest remaining divisible dim shards over model.
+    Without this, non-attention decode caches end up fully replicated —
+    the zamba2 decode hillclimb fix.
+    """
+    dp = _dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+    m_axes = _model_axes(mesh)
+    m_size = _axis_size(mesh, m_axes)
+
+    def pick_model(sz):
+        """Longest divisible prefix of the model axes for this dim."""
+        for end in range(len(m_axes), 0, -1):
+            cand = m_axes[:end]
+            n = _axis_size(mesh, cand)
+            if n > 1 and sz % n == 0:
+                return cand if len(cand) > 1 else cand[0]
+        return None
+
+    def legacy_leaf(x):
+        shape = x.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dp_size == 0:
+            spec[1] = dp
+        if len(shape) == 5:                    # (L, B, S, KV, hd)
+            order = [2, 3] if seq_shard else [3, 2]
+            for i in order:
+                m = pick_model(shape[i])
+                if m is not None:
+                    spec[i] = m
+                    break
+        elif len(shape) == 4 and not seq_shard:
+            m = pick_model(shape[2])
+            if m is not None:
+                spec[2] = m
+        return NamedSharding(mesh, P(*spec))
+
+    def smart_leaf(x):
+        shape = x.shape
+        spec = [None] * len(shape)
+        b_dim = None
+        for i, sz in enumerate(shape):
+            if sz == batch_match and sz % dp_size == 0:
+                spec[i] = dp
+                b_dim = i
+                break
+        # model axis: attention layout keeps kv-head/seq preference
+        if len(shape) == 5 and b_dim == 1:
+            order = [2, 3] if seq_shard else [3, 2]
+            for i in order:
+                m = pick_model(shape[i])
+                if m is not None:
+                    spec[i] = m
+                    break
+            return NamedSharding(mesh, P(*spec))
+        cands = sorted(
+            ((sz, i) for i, sz in enumerate(shape)
+             if i != b_dim and sz >= 2), reverse=True)
+        for sz, i in cands:
+            m = pick_model(sz)
+            if m is not None:
+                spec[i] = m
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    leaf = legacy_leaf if batch_match is None else smart_leaf
+    return jax.tree_util.tree_map(leaf, cache_tree)
+
+
+def zero1_sharding(param_spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: optimizer-state leaves additionally shard their largest
+    unsharded dim over the data axis (states are only touched at the
+    optimizer step, so the all-gather cost is paid once per step)."""
+    dp = "data" if "data" in mesh.shape else None
+    if dp is None:
+        return param_spec
+    dsize = mesh.shape[dp]
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    cands = [
+        (shape[i], i) for i in range(len(shape))
+        if entries[i] is None and shape[i] % dsize == 0
+    ]
+    if not cands:
+        return param_spec
+    _, idx = max(cands)
+    entries[idx] = dp
+    return P(*entries)

@@ -1,0 +1,158 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gemm.ops import conv2d_as_gemm, matmul
+from repro.kernels.gemm.ref import conv2d_ref, matmul_ref
+from repro.kernels.maxpool.kernel import maxpool
+from repro.kernels.maxpool.ref import maxpool2d_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key, shape, -4, 4, dtype=dtype)
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------- gemm ----
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (16, 32, 8), (128, 128, 128), (100, 70, 36), (256, 384, 128),
+    (1, 64, 1),
+])
+@pytest.mark.parametrize("dtype", ["int8", "float32", "bfloat16"])
+def test_gemm_matches_ref(m, k, n, dtype):
+    ka, kb = jax.random.split(KEY)
+    a = _rand(ka, (m, k), jnp.dtype(dtype))
+    b = _rand(kb, (k, n), jnp.dtype(dtype))
+    got = matmul(a, b, bm=32, bn=32, bk=32, interpret=True)
+    want = matmul_ref(a, b)
+    if dtype == "int8":
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=2e-2 if dtype == "bfloat16" else 1e-5, atol=1e-2,
+        )
+
+
+@pytest.mark.parametrize("img,cin,cout,kern,stride,pad", [
+    (8, 3, 8, 3, 1, 1), (16, 8, 16, 3, 1, 0), (8, 4, 4, 2, 2, 0),
+])
+def test_conv2d_as_gemm_matches_ref(img, cin, cout, kern, stride, pad):
+    ka, kb = jax.random.split(KEY)
+    x = _rand(ka, (2, img, img, cin), jnp.int8)
+    w = _rand(kb, (kern, kern, cin, cout), jnp.int8)
+    attrs = {"stride": stride, "padding": pad}
+    got = conv2d_as_gemm(attrs, x, w)
+    want = conv2d_ref(x, w, stride, pad)
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- maxpool ----
+@pytest.mark.parametrize("h,w,c,k", [(8, 8, 128, 2), (16, 16, 256, 2),
+                                     (12, 12, 128, 3)])
+@pytest.mark.parametrize("dtype", ["int8", "float32"])
+def test_maxpool_matches_ref(h, w, c, k, dtype):
+    x = _rand(KEY, (2, h, w, c), jnp.dtype(dtype))
+    if h % k == 0 and w % k == 0:
+        got = maxpool(x, k=k, bc=128, interpret=True)
+        want = maxpool2d_ref(x, k)
+        np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------- flash attention ----
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (9, 3)])
+@pytest.mark.parametrize("s,d", [(128, 64), (256, 32), (96, 64)])
+def test_flash_attention_matches_ref(hq, hkv, s, d):
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (2, hq, s, d), jnp.float32)
+    k = jax.random.normal(kk, (2, hkv, s, d), jnp.float32)
+    v = jax.random.normal(kv, (2, hkv, s, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_noncausal():
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (1, 4, 128, 32))
+    k = jax.random.normal(kk, (1, 4, 128, 32))
+    v = jax.random.normal(kv, (1, 4, 128, 32))
+    got = flash_attention(q, k, v, causal=False, bq=64, bk=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- rmsnorm ----
+@pytest.mark.parametrize("rows,d", [(4, 64), (256, 512), (100, 128)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_rmsnorm_matches_ref(rows, d, dtype):
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (rows, d), jnp.dtype(dtype))
+    w = jax.random.normal(kw, (d,), jnp.dtype(dtype))
+    got = rmsnorm(x, w, interpret=True)
+    want = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == "bfloat16" else 1e-5, atol=1e-2,
+    )
+
+
+# --------------------------------------------------- structural checks ----
+def test_gemm_blockspecs_mxu_aligned():
+    from repro.kernels.gemm.kernel import gemm_streamers
+    _, (a, b, o) = gemm_streamers(128, 128, 128, 16)
+    assert a.mxu_aligned() and b.mxu_aligned() and o.mxu_aligned()
+    # double-buffered VMEM footprint of all ports must fit v5e VMEM
+    from repro.core.costmodel import TpuV5e
+    assert sum(s.vmem_bytes for s in (a, b, o)) < TpuV5e().vmem_bytes
+
+
+# ------------------------------------------------------------------ ssd ----
+@pytest.mark.parametrize("b,h,nc,q,n,p", [
+    (1, 2, 4, 16, 16, 16), (2, 4, 2, 32, 64, 64), (1, 1, 8, 8, 32, 16),
+])
+def test_ssd_kernel_matches_sequential_ref(b, h, nc, q, n, p):
+    from repro.kernels.ssd.ops import ssd_chunked
+    from repro.kernels.ssd.ref import ssd_ref
+    ks = jax.random.split(KEY, 4)
+    xdt = jax.random.normal(ks[0], (b, h, nc, q, p), jnp.float32)
+    bm = jax.random.normal(ks[1], (b, nc, q, n), jnp.float32) * 0.5
+    cm = jax.random.normal(ks[2], (b, nc, q, n), jnp.float32) * 0.5
+    # log-decays: negative, cumulative within chunk
+    ldec = -jax.nn.softplus(
+        jax.random.normal(ks[3], (b, h, nc, q), jnp.float32))
+    lcum = jnp.cumsum(ldec, axis=-1)
+    got = ssd_chunked(xdt, bm, cm, lcum, interpret=True)
+    want = ssd_ref(xdt, bm, cm, lcum)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_state_carries_across_chunks():
+    """Output in chunk 2 must depend on chunk-0 inputs (recurrence)."""
+    from repro.kernels.ssd.ops import ssd_chunked
+    b, h, nc, q, n, p = 1, 1, 3, 8, 16, 16
+    ks = jax.random.split(KEY, 4)
+    xdt = jax.random.normal(ks[0], (b, h, nc, q, p))
+    bm = jax.random.normal(ks[1], (b, nc, q, n)) * 0.5
+    cm = jax.random.normal(ks[2], (b, nc, q, n)) * 0.5
+    lcum = jnp.cumsum(
+        -jax.nn.softplus(jax.random.normal(ks[3], (b, h, nc, q))), -1)
+    y1 = ssd_chunked(xdt, bm, cm, lcum, interpret=True)
+    xdt2 = xdt.at[:, :, 0].multiply(2.0)
+    y2 = ssd_chunked(xdt2, bm, cm, lcum, interpret=True)
+    assert not np.allclose(np.asarray(y1[:, :, 2]),
+                           np.asarray(y2[:, :, 2]))

@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.streamer import Streamer
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.models.common import rope
+from repro.optim.schedule import cosine_warmup
+from repro.roofline.analysis import collective_bytes, parse_hlo_shapes
+
+SET = settings(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------- streamer ----
+@SET
+@given(
+    bm=st.sampled_from([8, 16, 128]),
+    bn=st.sampled_from([8, 128, 256]),
+    m=st.integers(0, 7), n=st.integers(0, 7), k=st.integers(0, 7),
+)
+def test_streamer_index_map_affine(bm, bn, m, n, k):
+    s = Streamer("A", (bm, bn), advance=("m", "k"))
+    spec = s.to_block_spec(("m", "n", "k"))
+    assert spec.index_map(m, n, k) == (m, k)
+    # affine: advancing a used loop moves exactly one block index
+    assert spec.index_map(m + 1, n, k) == (m + 1, k)
+    # unused loop never moves the block
+    assert spec.index_map(m, n + 1, k) == (m, k)
+
+
+@SET
+@given(bm=st.integers(1, 64), bn=st.integers(1, 64),
+       fifo=st.integers(1, 4), bits=st.sampled_from([8, 16, 32]))
+def test_streamer_vmem_budget_linear(bm, bn, fifo, bits):
+    s = Streamer("A", (bm, bn), advance=("m", "k"), elem_bits=bits,
+                 fifo_depth=fifo)
+    assert s.vmem_bytes == bm * bn * bits // 8 * fifo
+    assert s.stream_cycles(10) >= 10 * max(
+        1, (bm * bn * bits) // s.port_bits)
+
+
+# ------------------------------------------------------------- allocation ----
+@SET
+@given(widths=st.lists(st.sampled_from([8, 16, 32, 64]), min_size=2,
+                       max_size=6))
+def test_allocation_no_overlap_among_live_buffers(widths):
+    from repro.core import Graph, OpNode, TensorSpec, allocate
+    from repro.core.presets import cluster_6d
+    inputs = {"x": TensorSpec((8, widths[0]), "int8")}
+    nodes = []
+    prev = "x"
+    for i, (a, b) in enumerate(zip(widths[:-1], widths[1:])):
+        inputs[f"w{i}"] = TensorSpec((a, b), "int8")
+        nodes.append(OpNode(f"fc{i}", "dense", (prev, f"w{i}"),
+                            TensorSpec((8, b), "int8"),
+                            {"requant_shift": 4}, 8 * a * b))
+        prev = f"fc{i}"
+    g = Graph("rand", inputs, nodes, (prev,))
+    plan = allocate(g, cluster_6d(), n_tiles=1, streamed=("x",),
+                    pipelined=True)
+    spans = sorted((b.offset, b.offset + b.total_bytes)
+                   for b in plan.buffers.values())
+    for (s0, e0), (s1, _) in zip(spans, spans[1:]):
+        assert e0 <= s1          # pipelined: all live -> disjoint
+
+
+# ------------------------------------------------------------ compression ----
+@SET
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+def test_quantize_roundtrip_bounded(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-5
+    assert q.dtype == jnp.int8
+
+
+# ------------------------------------------------------------------ rope ----
+@SET
+@given(seq=st.integers(1, 8), d=st.sampled_from([8, 16, 32]),
+       offset=st.integers(0, 1000))
+def test_rope_preserves_norm_and_relative_positions(seq, d, offset):
+    key = jax.random.PRNGKey(d + seq)
+    x = jax.random.normal(key, (1, seq, 2, d))
+    pos = jnp.arange(seq)[None, :] + offset
+    y = rope(x, pos, theta=1e4)
+    # rotation: per-position norms preserved
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4, atol=1e-4)
+    # relative property: dot(q_i, k_j) depends only on i - j
+    if seq >= 3:
+        q = rope(x, pos, theta=1e4)
+        dots01 = np.einsum("bshd,bshd->", np.asarray(q[:, 0:1]),
+                           np.asarray(q[:, 1:2]))
+        x_shift = rope(x, pos + 5, theta=1e4)
+        dots01_shift = np.einsum(
+            "bshd,bshd->", np.asarray(x_shift[:, 0:1]),
+            np.asarray(x_shift[:, 1:2]))
+        np.testing.assert_allclose(dots01, dots01_shift, rtol=1e-3,
+                                   atol=1e-3)
+
+
+# -------------------------------------------------------------- schedule ----
+@SET
+@given(st.integers(0, 10_000))
+def test_cosine_schedule_bounded(step):
+    lr = float(cosine_warmup(step, peak_lr=1.0, warmup=100, total=10_000))
+    assert 0.0 <= lr <= 1.0 + 1e-6
+
+
+# -------------------------------------------------------- roofline parser ----
+@SET
+@given(dims=st.lists(st.integers(1, 512), min_size=0, max_size=3),
+       dt=st.sampled_from(["f32", "bf16", "s8", "u32"]))
+def test_hlo_shape_parser(dims, dt):
+    nbytes = {"f32": 4, "bf16": 2, "s8": 1, "u32": 4}[dt]
+    txt = f"{dt}[{','.join(map(str, dims))}]"
+    want = int(np.prod(dims)) * nbytes if dims else nbytes
+    assert parse_hlo_shapes(txt) == want
+
+
+def test_collective_parser_counts_kinds():
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={{0,1,2,3}}
+  %ag = bf16[4,256]{1,0} all-gather(bf16[1,256]{1,0} %y), replica_groups=[2,4]
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %z)
+"""
+    out = collective_bytes(hlo, 4)
+    assert out["all-reduce"] == 2 * 4096 * 3 / 4
+    assert out["all-gather"] == 2048 * 3 / 4
+    assert out["collective-permute"] == 32.0
+    assert out["total"] == sum(
+        out[k] for k in ("all-reduce", "all-gather", "collective-permute",
+                         "reduce-scatter", "all-to-all"))

@@ -1,0 +1,127 @@
+"""End-to-end behaviour tests for the whole system (paper claims included)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import fig8_heterogeneous, fig10_roofline, table1_e2e
+from repro.core import allocate, emit, place
+from repro.core.presets import cluster_6b, cluster_6d, tinyml_graph
+
+
+# ----------------------------------------------------- paper-claim checks ----
+def test_fig8_ladder_matches_paper_trend():
+    rows = fig8_heterogeneous.run(verbose=False)
+    by = {r["config"]: r for r in rows}
+    # GeMM accel boosts the conv-dominated net by >20x (paper: 152x on a
+    # much more conv-heavy net)
+    assert by["+gemm(seq)"]["total_speedup"] > 20
+    # maxpool accel then removes the next bottleneck (paper: 6.9x)
+    assert by["+maxpool(seq)"]["step_speedup"] > 3
+    # hybrid-coupled pipelining on top (paper: 3.18x with 4 balanced stages)
+    assert by["pipelined(SNAX)"]["step_speedup"] > 1.4
+    # wall-clock JAX programs actually executed
+    assert all(r["wall_us_jax"] > 0 for r in rows)
+
+
+def test_fig10_roofline_matches_paper_points():
+    rows = fig10_roofline.run(verbose=False)
+    by_regime = {}
+    for r in rows:
+        by_regime.setdefault(r["regime"], []).append(
+            r["util_vs_roofline_pct"])
+    # paper: 92% PE util compute-bound; ours within a few points
+    assert max(by_regime["compute"]) > 88
+    # paper: ~79% of bandwidth at low intensity
+    assert max(by_regime["bandwidth"]) > 70
+    # paper: 78% at the ridge
+    assert 60 < by_regime["ridge"][0] <= 95
+    # hybrid coupling beats the conventional C-runtime everywhere
+    for r in rows:
+        assert r["util_vs_roofline_pct"] > r["c_runtime_util_pct"]
+
+
+def test_table1_within_order_of_magnitude():
+    rows = table1_e2e.run(verbose=False)
+    for r in rows:
+        assert 0.2 < r["ratio"] < 3.0, r
+
+
+# --------------------------------------------------------- system wiring ----
+def test_full_compile_pipeline_bit_exact_vs_host():
+    g = tinyml_graph()
+    accel = cluster_6d()
+    host = cluster_6b()
+    pa = place(g, accel)
+    ph = place(g, host)
+    fa = emit(g, pa, accel, streamed=("x",), n_tiles=4)
+    fh = emit(g, ph, host)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    vals = {
+        "x": jax.random.randint(ks[0], g.inputs["x"].shape, -8, 8,
+                                jnp.int8),
+        "w_conv": jax.random.randint(ks[1], g.inputs["w_conv"].shape,
+                                     -8, 8, jnp.int8),
+        "w_fc": jax.random.randint(ks[2], g.inputs["w_fc"].shape, -8, 8,
+                                   jnp.int8),
+    }
+    np.testing.assert_array_equal(np.asarray(fa(vals)["fc"]),
+                                  np.asarray(fh(vals)["fc"]))
+
+
+def test_allocation_reuse_beats_naive_sum():
+    from benchmarks.table1_e2e import autoencoder_graph
+    g = autoencoder_graph()
+    c = cluster_6d()
+    plan = allocate(g, c, n_tiles=1, streamed=("x",), pipelined=False,
+                    weight_streaming=True)
+    naive = sum(b.nbytes * max(b.copies, 1)
+                for b in plan.buffers.values())
+    assert plan.peak_bytes < naive
+    assert plan.peak_bytes <= c.hw.spm_bytes
+
+
+def test_dryrun_artifacts_exist_and_clean():
+    """The committed dry-run artifacts must show 0 failures across all 80
+    (arch x shape x mesh) cells."""
+    import json
+    import os
+    here = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "results")
+    total = {"ok": 0, "skip": 0}
+    for name in ("dryrun_single.json", "dryrun_multi.json"):
+        path = os.path.join(here, name)
+        if not os.path.exists(path):
+            import pytest
+            pytest.skip("dry-run artifacts not generated yet")
+        rows = json.load(open(path))
+        assert len(rows) == 40
+        for r in rows:
+            assert r["status"] in ("ok", "skip"), r
+            total[r["status"]] += 1
+    assert total["ok"] == 64 and total["skip"] == 16
+
+
+def test_serve_server_slot_reuse():
+    import repro.configs as configs
+    from repro.configs.base import reduce
+    from repro.launch.serve import Request, Server
+    from repro.models import lm
+    cfg = reduce(configs.get("smollm_135m"))
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    srv = Server(cfg, params, batch=2, max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                    max_new=3) for i in range(4)]
+    done = []
+    pending = list(reqs)
+    inflight = []
+    for _ in range(100):
+        while pending and srv.admit(pending[0]):
+            inflight.append(pending.pop(0))
+        if not srv.tick() and not pending:
+            break
+        for r in list(inflight):
+            if r.done:
+                inflight.remove(r)
+                done.append(r)
+    assert len(done) == 4 and all(len(r.out) == 3 for r in done)
