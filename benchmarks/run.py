@@ -8,7 +8,12 @@
 """
 from __future__ import annotations
 
+import os
 import sys
+
+# runnable as `python benchmarks/run.py ...` from the repo root or anywhere:
+# the repo root (parent of this file's dir) anchors the benchmarks package.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
@@ -22,7 +27,9 @@ def main() -> None:
         for r in rows:
             print(f"fig8.{r['config']},{r['wall_us_jax']},"
                   f"total_speedup={r['total_speedup']}x;"
-                  f"util={r['sys_util_pct']}%")
+                  f"util={r['sys_util_pct']}%;"
+                  f"exec_us={r['wall_us_executor']};"
+                  f"measured_overlap={r['measured_overlap_x']}x")
     if which in ("all", "fig10"):
         rows = fig10_roofline.run()
         for r in rows:

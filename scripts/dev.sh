@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Local dev entry point: run any command under the exact env CI uses.
+#
+#   scripts/dev.sh                          # tier-1 suite (pytest -x -q)
+#   scripts/dev.sh python benchmarks/run.py micro
+#   scripts/dev.sh python -m repro.launch.serve --arch smollm_135m --reduced
+set -euo pipefail
+
+REPO="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+
+export JAX_PLATFORMS=cpu
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export PYTHONPATH="$REPO/src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "$#" -eq 0 ]; then
+    exec python -m pytest -x -q
+fi
+exec "$@"

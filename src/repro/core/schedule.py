@@ -5,6 +5,12 @@ processes tile ``t - s`` at tick ``t``.  Barriers are inserted only between
 stages with data dependencies; DMA-in / compute stages / DMA-out all overlap,
 which is precisely the loose-control + tight-data execution model of Fig. 3.
 
+Each ``StageTask`` carries both the cycle model *and* the execution payload
+(the bound compute callable plus operand names), so the same schedule drives
+the analytical benchmarks (Fig. 8 / Fig. 10) and the runtime
+``AsyncExecutor`` (repro.runtime.executor) that actually plays the pipeline
+on device.
+
 The schedule also yields the cycle/utilization model used by the Fig. 8 /
 Fig. 10 benchmarks:
   * ``pipelined``   — asynchronous parallel stages (SNAX execution model);
@@ -15,12 +21,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Literal
+from typing import Any, Callable, Literal
 
 from repro.core.accelerator import Task
 from repro.core.allocation import AllocationPlan
 from repro.core.cluster import Cluster
-from repro.core.graph import Graph
+from repro.core.graph import Graph, TensorSpec
 
 __all__ = ["StageTask", "ScheduleReport", "build_schedule"]
 
@@ -29,9 +35,24 @@ DMA = "dma-engine"
 
 @dataclasses.dataclass(frozen=True)
 class StageTask:
+    """One pipeline stage: cycle model + concrete execution payload.
+
+    DMA stages (``dma_in`` / ``dma_out``) have ``fn=None``; their ``inputs``
+    name the values the DMA moves (streamed activations in, graph outputs
+    out).  Compute stages bind the placed accelerator's kernel callable with
+    the node attrs, ready for ``fn(*operands)``.
+    """
+
     stage: str                 # "dma_in" | node name | "dma_out"
     device: str                # accelerator name or DMA
     cycles: dict[str, int]     # from costmodel.node_cycles (or dma)
+    # --- execution payload (consumed by repro.runtime.executor) ---
+    kernel: str | None = None            # kernel type, None for DMA stages
+    fn: Callable[..., Any] | None = None  # attrs-bound compute callable
+    inputs: tuple[str, ...] = ()          # operand value names, in order
+    output: str | None = None             # value this stage defines
+    tiled_inputs: frozenset[str] = frozenset()  # inputs sliced per tile
+    out_spec: TensorSpec | None = None    # full (untiled) output spec
 
 
 @dataclasses.dataclass
@@ -43,6 +64,10 @@ class ScheduleReport:
     device_busy: dict[str, int]        # compute-busy cycles per device
     device_util_pct: dict[str, float]  # busy / total
     system_util_pct: float             # bottleneck device utilization
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
 
     def speedup_over(self, other: "ScheduleReport") -> float:
         return other.total_cycles / self.total_cycles
@@ -76,7 +101,21 @@ def _node_task(graph: Graph, node_name: str, accel_name: str,
         n_ops=max(1, node.n_ops // n_tiles),
         stream_bytes=sum(operand_bytes),
     )
-    return StageTask(node.name, accel_name, task.cycles(spec, cluster.hw))
+    compute = spec.compute_fns[node.kernel]
+
+    def bound(*args, _fn=compute, _attrs=node.attrs):
+        return _fn(_attrs, *args)
+
+    return StageTask(
+        node.name, accel_name, task.cycles(spec, cluster.hw),
+        kernel=node.kernel,
+        fn=bound,
+        inputs=node.inputs,
+        output=node.name,
+        tiled_inputs=frozenset(
+            i for i in node.inputs if _tiled(graph, i, streamed)),
+        out_spec=node.out,
+    )
 
 
 def _tiled(graph: Graph, value: str, streamed: frozenset[str]) -> bool:
@@ -89,12 +128,26 @@ def build_schedule(
     placement: dict[str, str],
     cluster: Cluster,
     *,
-    plan: AllocationPlan,
+    plan: AllocationPlan | None = None,
     n_tiles: int,
     streamed: tuple[str, ...],
     mode: Literal["pipelined", "sequential"] = "pipelined",
     weight_streaming: bool = False,
 ) -> ScheduleReport:
+    """Schedule the placed graph over ``n_tiles`` tiles.
+
+    ``plan`` (the static-allocation pass output) is optional: when given it
+    is cross-checked against the schedule — every value the pipeline moves
+    must have an SPM buffer — so pass-ordering mistakes fail loudly here
+    rather than at execution time.
+    """
+    if plan is not None:
+        missing = [v for v in
+                   list(streamed) + [n.name for n in graph.nodes]
+                   if v not in plan.buffers]
+        if missing:
+            raise ValueError(
+                f"allocation plan missing SPM buffers for {missing}")
     hw = cluster.hw
     in_bytes = sum(
         graph.inputs[s].nbytes // n_tiles for s in streamed
@@ -108,12 +161,15 @@ def build_schedule(
     out_bytes = sum(graph.value_spec(o).nbytes // n_tiles for o in graph.outputs)
 
     stages: list[StageTask] = [
-        StageTask("dma_in", DMA, _dma_cycles(hw, in_bytes))
+        StageTask("dma_in", DMA, _dma_cycles(hw, in_bytes),
+                  inputs=tuple(streamed),
+                  tiled_inputs=frozenset(streamed))
     ]
     for node in graph.topo():
         stages.append(_node_task(graph, node.name, placement[node.name],
                                  cluster, n_tiles, frozenset(streamed)))
-    stages.append(StageTask("dma_out", DMA, _dma_cycles(hw, out_bytes)))
+    stages.append(StageTask("dma_out", DMA, _dma_cycles(hw, out_bytes),
+                            inputs=tuple(graph.outputs)))
 
     if mode == "pipelined":
         total = _pipelined_cycles(stages, n_tiles, hw.barrier_cycles)

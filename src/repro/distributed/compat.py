@@ -1,0 +1,27 @@
+"""Version compatibility shims for the distributed layer.
+
+``jax.shard_map`` / ``jax.lax.pvary`` only exist on newer JAX releases; on
+older ones the same semantics live in ``jax.experimental.shard_map`` (which
+needs ``check_rep=False`` for ppermute-carrying scans) and ``pvary`` is a
+no-op because the old tracer has no varying-manual-axes type.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pvary"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+        kw.setdefault("check_rep", False)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+
+def pvary(x, axis_names):
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axis_names) if fn is not None else x

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 __all__ = ["sp_decode_attention", "sp_attention_shardmap"]
 
 NEG = -1e30
@@ -61,7 +63,7 @@ def sp_attention_shardmap(mesh, axis: str = "model"):
     (cache seq dim on ``axis``), gets full attention out."""
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(), P(None, axis, None, None),
                   P(None, axis, None, None), P(None, axis), P()),
         out_specs=P(),

@@ -5,9 +5,17 @@ cache slots, decoded in lockstep (one fused ``decode_step`` per tick for the
 whole batch), and retired on EOS/length — the standard TPU serving shape
 (static batch, slot reuse) rather than a GPU-style dynamic batcher.
 
+``microbatches > 1`` splits the slot pool into shards, each with its own KV
+cache, and decodes them through the asynchronous pipeline: every active
+shard's decode step is dispatched fire-and-forget on a ``DeviceQueue``
+(riding JAX async dispatch, cache buffers donated per shard), and the host
+synchronizes only when it reads the sampled tokens — the serving-side mirror
+of the SNAX loose-control / tight-data execution model.  Idle shards skip
+their decode entirely.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_135m \
-      --reduced --batch 4 --prompt-len 16 --gen 32
+      --reduced --batch 4 --prompt-len 16 --gen 32 --microbatches 2
 """
 from __future__ import annotations
 
@@ -21,9 +29,8 @@ import numpy as np
 
 import repro.configs as configs
 from repro.configs.base import reduce as reduce_cfg
-from repro.data.synthetic import make_batch
-from repro.launch.mesh import make_local_mesh
 from repro.models import lm
+from repro.runtime.executor import DeviceQueue
 
 __all__ = ["Server", "main"]
 
@@ -38,17 +45,35 @@ class Request:
 
 
 class Server:
-    """Static-batch continuous decoding over a slot pool."""
+    """Static-batch continuous decoding over a slot pool.
 
-    def __init__(self, cfg, params, *, batch: int, max_len: int):
+    Slots are partitioned into ``microbatches`` shards of ``batch //
+    microbatches`` slots; each shard owns an independent KV cache and is
+    decoded as one pipeline task per tick.
+    """
+
+    def __init__(self, cfg, params, *, batch: int, max_len: int,
+                 microbatches: int = 1):
+        if microbatches < 1:
+            raise ValueError(f"microbatches must be >= 1, got {microbatches}")
+        if batch % microbatches:
+            raise ValueError(
+                f"batch {batch} not divisible by microbatches {microbatches}")
         self.cfg, self.params = cfg, params
         self.batch, self.max_len = batch, max_len
-        self.caches = lm.init_caches(cfg, batch, max_len)
+        self.microbatches = microbatches
+        self.mb = batch // microbatches
+        self.caches = [lm.init_caches(cfg, self.mb, max_len)
+                       for _ in range(microbatches)]
         self.slots: list[Request | None] = [None] * batch
         self._decode = jax.jit(
             lambda p, t, c: lm.decode_step(p, t, c, cfg),
             donate_argnums=(2,))
+        self.queue = DeviceQueue("decode")
         self.ticks = 0
+
+    def _shard(self, slot: int) -> int:
+        return slot // self.mb
 
     # ------------------------------------------------------------- admit
     def admit(self, req: Request) -> bool:
@@ -56,43 +81,70 @@ class Server:
             if s is None:
                 self.slots[i] = req
                 # teacher-forced prefill through the decode path keeps the
-                # cache layout identical for all slots (slot-local lengths
-                # differ; lockstep decode uses per-slot masking upstream).
+                # cache layout identical for all slots.  NOTE: the cache
+                # position counter is shared per shard (lm caches carry one
+                # ``len`` per layer, not per slot), so staggered admits and
+                # slot reuse consume cache length for the whole shard —
+                # ``max_len`` must be sized for the total tokens fed over a
+                # slot's reuse lifetime (see main()).
                 for tok in req.prompt:
                     self._feed(i, int(tok))
+                # the prefill's final logits predict the first new token;
+                # sample it here rather than re-feeding prompt[-1] (which
+                # would duplicate it in the KV cache).
+                nxt = int(jnp.argmax(self._last_logits[i % self.mb, 0]))
+                req.out.append(nxt)
+                if len(req.out) >= req.max_new:
+                    req.done = True
+                    self.slots[i] = None
                 return True
         return False
 
     def _feed(self, slot: int, token: int):
-        toks = np.zeros((self.batch, 1), np.int32)
-        toks[slot] = token
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches)
+        shard = self._shard(slot)
+        toks = np.zeros((self.mb, 1), np.int32)
+        toks[slot % self.mb] = token
+        logits, self.caches[shard] = self.queue.submit(
+            self._decode, self.params, jnp.asarray(toks),
+            self.caches[shard])
         self._last_logits = logits
 
     # -------------------------------------------------------------- tick
     def tick(self):
-        """One lockstep decode step for every active slot."""
-        toks = np.zeros((self.batch, 1), np.int32)
-        active = False
-        for i, req in enumerate(self.slots):
-            if req is None or req.done:
-                continue
-            active = True
-            prev = req.out[-1] if req.out else int(req.prompt[-1])
-            toks[i] = prev
-        if not active:
+        """One lockstep decode step for every active shard.
+
+        All active shards are dispatched before any result is read — the
+        dependency-only barrier is the argmax read at the end.
+        """
+        inflight: list[tuple[int, jax.Array]] = []
+        for shard in range(self.microbatches):
+            toks = np.zeros((self.mb, 1), np.int32)
+            active = False
+            for j in range(self.mb):
+                req = self.slots[shard * self.mb + j]
+                if req is None or req.done:
+                    continue
+                active = True
+                toks[j] = req.out[-1]       # prefill seeded out[0]
+            if not active:
+                continue                     # idle shard: no dispatch
+            logits, self.caches[shard] = self.queue.submit(
+                self._decode, self.params, jnp.asarray(toks),
+                self.caches[shard])
+            inflight.append((shard, logits))
+        if not inflight:
             return False
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        for i, req in enumerate(self.slots):
-            if req is None or req.done:
-                continue
-            req.out.append(int(nxt[i]))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.slots[i] = None     # retire -> slot reusable
+        for shard, logits in inflight:       # sync point: token readback
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for j in range(self.mb):
+                i = shard * self.mb + j
+                req = self.slots[i]
+                if req is None or req.done:
+                    continue
+                req.out.append(int(nxt[j]))
+                if len(req.out) >= req.max_new:
+                    req.done = True
+                    self.slots[i] = None     # retire -> slot reusable
         self.ticks += 1
         return True
 
@@ -105,14 +157,19 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
     params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.gen + 8
-    server = Server(cfg, params, batch=args.batch, max_len=max_len)
+    # cache positions are shared per shard, so a reused slot keeps
+    # consuming length: size for the number of admission waves.
+    waves = -(-args.requests // args.batch)
+    max_len = waves * (args.prompt_len + args.gen) + 8
+    server = Server(cfg, params, batch=args.batch, max_len=max_len,
+                    microbatches=args.microbatches)
 
     rng = np.random.default_rng(0)
     pending = [
@@ -136,7 +193,8 @@ def main(argv=None):
     total_tokens = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
-          f"{server.ticks} decode ticks)")
+          f"{server.ticks} decode ticks, "
+          f"{server.queue.dispatched} queue dispatches incl. prefill)")
     assert all(len(r.out) == args.gen for r in done)
     return 0
 

@@ -1,3 +1,5 @@
+from repro.runtime.executor import AsyncExecutor, DeviceQueue
 from repro.runtime.supervisor import StragglerMonitor, Supervisor, TrainLoop
 
-__all__ = ["StragglerMonitor", "Supervisor", "TrainLoop"]
+__all__ = ["AsyncExecutor", "DeviceQueue",
+           "StragglerMonitor", "Supervisor", "TrainLoop"]

@@ -1,0 +1,238 @@
+"""Event-driven asynchronous executor for the SNAX virtual pipeline.
+
+``build_schedule`` models the Fig. 5 pipeline in cycles; ``AsyncExecutor``
+*plays* it: the same ``StageTask`` list, executed tick by tick with
+per-accelerator task queues and fire-and-forget dispatch riding JAX's async
+dispatch.  At tick ``t`` stage ``s`` processes tile ``t - s`` — DMA-in,
+compute stages, and DMA-out for different tiles are all in flight at once,
+and the only barriers are data dependencies (a stage's operands are the
+jax.Arrays produced by its predecessor — XLA sequences them; the host never
+calls ``block_until_ready`` per tile).
+
+Double-buffered tile rotation is realized two ways:
+
+  * liveness release — a tile's intermediate value is dropped from the
+    executor's environment as soon as its last consumer stage has been
+    dispatched, so at steady state only the in-flight window of tiles holds
+    buffers (the SW analogue of odd/even SPM rotation);
+  * buffer donation — when a stage's tiled operand has exactly one consumer
+    and the same shape/dtype as the stage output, the jitted stage donates
+    it (``donate_argnums``) and XLA writes the output into the operand's
+    buffer, exactly like an in-place SPM bank.
+
+``mode="sequential"`` drives the identical task list the conventional way —
+one task at a time with an exposed synchronization after every dispatch —
+so benchmarks can measure the wall-clock value of overlap, not just model
+it (Fig. 8's measured column).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cluster import Cluster
+from repro.core.graph import Graph
+from repro.core.schedule import ScheduleReport, StageTask
+
+__all__ = ["DeviceQueue", "AsyncExecutor"]
+
+
+class DeviceQueue:
+    """Per-accelerator in-order task queue (fire-and-forget dispatch).
+
+    ``submit`` returns immediately — JAX async dispatch queues the work on
+    the backend.  The queue keeps a two-deep completion window (the odd/even
+    double buffer): older results are released so their buffers can be
+    reclaimed or donated while newer tiles are still in flight.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.dispatched = 0
+        self._window = collections.deque(maxlen=2)
+
+    def submit(self, fn: Callable, *args):
+        out = fn(*args)
+        self.dispatched += 1
+        self._window.append(out)
+        return out
+
+    def drain(self) -> None:
+        """Block until the completion window has retired (program end /
+        explicit sync point — never called per tile in pipelined mode)."""
+        leaves = jax.tree_util.tree_leaves(list(self._window))
+        live = [a for a in leaves
+                if not (hasattr(a, "is_deleted") and a.is_deleted())]
+        if live:
+            jax.block_until_ready(live)
+        self._window.clear()
+
+
+class AsyncExecutor:
+    """Execute a scheduled graph as the Fig. 5 asynchronous pipeline.
+
+    Consumes the compiler-pass artifacts (``Graph``, placement,
+    ``ScheduleReport``) and is itself the compiled program: calling it with
+    the graph's input values returns the graph outputs, bit-identical to
+    the sequential ``emit`` reference.
+    """
+
+    def __init__(self, graph: Graph, placement: dict[str, str],
+                 cluster: Cluster, report: ScheduleReport):
+        self.graph = graph
+        self.placement = placement
+        self.cluster = cluster
+        self.report = report
+        self.n_tiles = report.n_tiles
+        dma_in = report.stages[0]
+        self.streamed: tuple[str, ...] = dma_in.inputs
+        if self.n_tiles > 1 and not self.streamed:
+            raise ValueError("n_tiles > 1 requires streamed inputs")
+        for name in self.streamed:
+            if graph.inputs[name].shape[0] % self.n_tiles:
+                raise ValueError(
+                    f"{name}: dim0 {graph.inputs[name].shape[0]} not "
+                    f"divisible by n_tiles={self.n_tiles}")
+
+        # value -> number of consuming stages (incl. DMA-out for outputs).
+        # dma_in *produces* the streamed tile slices, so it is not a
+        # consumer — counting it would pin every slice in env forever and
+        # disable donation for streamed activations.
+        self._consumers: dict[str, int] = {}
+        for st in report.stages:
+            if st.stage == "dma_in":
+                continue
+            for i in st.inputs:
+                self._consumers[i] = self._consumers.get(i, 0) + 1
+
+        self.queues: dict[str, DeviceQueue] = {
+            st.device: DeviceQueue(st.device) for st in report.stages
+        }
+        self._stage_fns = {
+            st.stage: self._compile_stage(st)
+            for st in report.stages if st.fn is not None
+        }
+        self._slicers = {
+            name: self._make_slicer(graph.inputs[name].shape[0]
+                                    // self.n_tiles)
+            for name in self.streamed
+        }
+        self._dma_copy = jax.jit(lambda a: a)
+        # run stats (reset on every run)
+        self.ticks = 0
+        self.dispatch_log: list[tuple[int, str, str, int]] = []
+
+    # ------------------------------------------------------------ compile
+    def _compile_stage(self, st: StageTask) -> Callable:
+        donate = []
+        for idx, name in enumerate(st.inputs):
+            if (name in st.tiled_inputs
+                    and name not in self.graph.outputs
+                    and self._consumers.get(name) == 1
+                    and st.out_spec is not None
+                    and self.graph.value_spec(name).shape
+                    == st.out_spec.shape
+                    and self.graph.value_spec(name).dtype
+                    == st.out_spec.dtype):
+                donate.append(idx)
+        return jax.jit(st.fn, donate_argnums=tuple(donate))
+
+    @staticmethod
+    def _make_slicer(tile_rows: int) -> Callable:
+        @jax.jit
+        def dma_in(v, i):
+            return jax.lax.dynamic_slice_in_dim(v, i * tile_rows,
+                                                tile_rows, 0)
+
+        return dma_in
+
+    # ----------------------------------------------------------- dispatch
+    def _dispatch(self, st: StageTask, tile: int, tick: int, values,
+                  weights, env, pending, out_tiles):
+        q = self.queues[st.device]
+        self.dispatch_log.append((tick, st.stage, st.device, tile))
+        if st.stage == "dma_in":
+            slices = []
+            for name in st.inputs:
+                env[tile][name] = q.submit(
+                    self._slicers[name], values[name],
+                    jnp.int32(tile))
+                slices.append(env[tile][name])
+            return slices
+        if st.stage == "dma_out":
+            copies = []
+            for name in st.inputs:
+                out = q.submit(self._dma_copy, env[tile][name])
+                out_tiles[name][tile] = out
+                copies.append(out)
+                self._release(env, pending, tile, name)
+            return copies
+        args = [env[tile][i] if i in st.tiled_inputs else weights[i]
+                for i in st.inputs]
+        out = q.submit(self._stage_fns[st.stage], *args)
+        env[tile][st.output] = out
+        for i in st.inputs:
+            if i in st.tiled_inputs:
+                self._release(env, pending, tile, i)
+        return out
+
+    def _release(self, env, pending, tile: int, value: str) -> None:
+        # drop the env reference once every consumer stage has been
+        # dispatched — the tile-rotation release that bounds live buffers.
+        pending[tile][value] -= 1
+        if pending[tile][value] <= 0:
+            env[tile].pop(value, None)
+
+    # ---------------------------------------------------------------- run
+    def run(self, values: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        stages = self.report.stages
+        n_stages = len(stages)
+        n_tiles = self.n_tiles
+        weights = {k: v for k, v in values.items()
+                   if k not in self.streamed}
+        env: list[dict] = [dict() for _ in range(n_tiles)]
+        pending = [dict(self._consumers) for _ in range(n_tiles)]
+        out_tiles = {o: [None] * n_tiles for o in self.graph.outputs}
+        self.ticks = 0
+        self.dispatch_log = []
+        for q in self.queues.values():
+            q.dispatched = 0
+
+        if self.report.mode == "sequential":
+            # conventional runtime: serial tasks, sync exposed after every
+            # task — DMA slices/copies included, nothing is left in flight
+            for tile in range(n_tiles):
+                for st in stages:
+                    res = self._dispatch(st, tile, self.ticks, values,
+                                         weights, env, pending, out_tiles)
+                    jax.block_until_ready(res)
+                    self.ticks += 1
+        else:
+            # Fig. 5 pipeline: tick t dispatches stage s on tile t - s;
+            # no host synchronization inside the loop.
+            for tick in range(n_tiles + n_stages - 1):
+                for s_idx, st in enumerate(stages):
+                    tile = tick - s_idx
+                    if 0 <= tile < n_tiles:
+                        self._dispatch(st, tile, tick, values, weights,
+                                       env, pending, out_tiles)
+                self.ticks += 1
+
+        if n_tiles == 1:
+            return {o: out_tiles[o][0] for o in self.graph.outputs}
+        return {o: jnp.concatenate(out_tiles[o], axis=0)
+                for o in self.graph.outputs}
+
+    __call__ = run
+
+    # --------------------------------------------------------------- misc
+    def drain(self) -> None:
+        for q in self.queues.values():
+            q.drain()
+
+    @property
+    def dispatched(self) -> dict[str, int]:
+        return {name: q.dispatched for name, q in self.queues.items()}

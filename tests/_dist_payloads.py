@@ -138,7 +138,9 @@ def payload_compressed_psum():
     from repro.distributed.compression import compressed_psum_mean
     mesh = jax.make_mesh((8,), ("pod",))
 
-    @functools.partial(jax.shard_map, mesh=mesh,
+    from repro.distributed.compat import shard_map
+
+    @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P("pod"), P("pod")), out_specs=P("pod"))
     def run(x, err):
         m, e = compressed_psum_mean(x[0], "pod", err[0])

@@ -107,6 +107,18 @@ def _sched(cluster, graph, mode, disabled=frozenset()):
                           streamed=("x",), mode=mode)
 
 
+def test_schedule_rejects_mismatched_plan():
+    g = tinyml_graph()
+    c = cluster_6d()
+    p = place(g, c)
+    other = Graph("other", {"x": TensorSpec((8, 8), "int8")},
+                  [OpNode("fc", "dense", ("x",), TensorSpec((8, 8), "int8"),
+                          {}, 64)], ("fc",))
+    bad_plan = allocate(other, c, n_tiles=1, streamed=("x",))
+    with pytest.raises(ValueError, match="missing SPM buffers"):
+        build_schedule(g, p, c, plan=bad_plan, n_tiles=8, streamed=("x",))
+
+
 def test_pipelined_beats_sequential():
     g = tinyml_graph()
     c = cluster_6d()

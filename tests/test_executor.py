@@ -1,0 +1,188 @@
+"""Tests for the runtime AsyncExecutor (the Fig. 5 pipeline, executed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Graph, OpNode, TensorSpec, build_schedule, emit, place,
+)
+from repro.core.presets import (
+    cluster_6b, cluster_6c, cluster_6d, tinyml_graph,
+)
+from repro.runtime.executor import AsyncExecutor, DeviceQueue
+
+
+def _vals(graph, seed=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(graph.inputs))
+    return {
+        name: jax.random.randint(k, spec.shape, -8, 8, jnp.int8)
+        for k, (name, spec) in zip(ks, graph.inputs.items())
+    }
+
+
+def _schedule(graph, placement, cluster, n_tiles, mode="pipelined"):
+    return build_schedule(graph, placement, cluster, n_tiles=n_tiles,
+                          streamed=("x",), mode=mode)
+
+
+# -------------------------------------------------------- bit-equivalence ----
+@pytest.mark.parametrize("make_cluster",
+                         [cluster_6b, cluster_6c, cluster_6d])
+@pytest.mark.parametrize("n_tiles", [1, 2, 4])
+def test_executor_bit_identical_to_reference(make_cluster, n_tiles):
+    """AsyncExecutor == the n_tiles=1 ``emit`` reference on every preset."""
+    g = tinyml_graph()
+    c = make_cluster()
+    p = place(g, c)
+    ref = emit(g, p, c)(_vals(g))["fc"]
+    rep = _schedule(g, p, c, n_tiles)
+    got = AsyncExecutor(g, p, c, rep)(_vals(g))["fc"]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("mode", ["pipelined", "sequential"])
+def test_executor_modes_agree(mode):
+    g = tinyml_graph()
+    c = cluster_6d()
+    p = place(g, c)
+    rep = _schedule(g, p, c, 4, mode)
+    got = AsyncExecutor(g, p, c, rep)(_vals(g))["fc"]
+    ref = emit(g, p, c)(_vals(g))["fc"]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_emit_lowers_tiled_through_executor():
+    g = tinyml_graph()
+    c = cluster_6d()
+    p = place(g, c)
+    fn = emit(g, p, c, streamed=("x",), n_tiles=4)
+    assert isinstance(fn, AsyncExecutor)
+    np.testing.assert_array_equal(
+        np.asarray(fn(_vals(g))["fc"]),
+        np.asarray(emit(g, p, c)(_vals(g))["fc"]))
+
+
+# ----------------------------------------------------------- tick budget ----
+@pytest.mark.parametrize("n_tiles", [1, 2, 8])
+def test_pipelined_dispatch_tick_budget(n_tiles):
+    """Pipelined mode issues at most n_stages + n_tiles - 1 ticks."""
+    g = tinyml_graph()
+    c = cluster_6d()
+    p = place(g, c)
+    rep = _schedule(g, p, c, n_tiles)
+    ex = AsyncExecutor(g, p, c, rep)
+    ex(_vals(g))
+    assert ex.ticks <= rep.n_stages + n_tiles - 1
+    # every (stage, tile) dispatched exactly once, at tick = stage + tile
+    seen = set()
+    stage_idx = {st.stage: i for i, st in enumerate(rep.stages)}
+    for tick, stage, _device, tile in ex.dispatch_log:
+        assert tick == stage_idx[stage] + tile
+        assert (stage, tile) not in seen
+        seen.add((stage, tile))
+    assert len(seen) == rep.n_stages * n_tiles
+
+
+def test_per_device_queues_count_dispatches():
+    g = tinyml_graph()
+    c = cluster_6d()
+    p = place(g, c)
+    rep = _schedule(g, p, c, 4)
+    ex = AsyncExecutor(g, p, c, rep)
+    ex(_vals(g))
+    # 4 tiles x (conv + fc) on the gemm accel, 4 x pool on maxpool
+    assert ex.dispatched["gemm-accel"] == 8
+    assert ex.dispatched["maxpool-accel"] == 4
+    assert ex.dispatched["riscv-core"] == 4          # flatten
+    assert ex.dispatched["dma-engine"] == 8          # 4 in + 4 out
+    ex.drain()                                        # no-op after sync
+
+
+# -------------------------------------------------------- buffer donation ----
+def test_spec_matched_stage_donates_input_buffer():
+    """A tiled single-consumer operand with the same spec as the output is
+    donated to XLA (the in-place SPM bank write-back)."""
+    g = Graph(
+        "donate",
+        {"x": TensorSpec((8, 32), "int8"),
+         "w": TensorSpec((32, 16), "int8")},
+        [
+            OpNode("fc1", "dense", ("x", "w"),
+                   TensorSpec((8, 16), "int32"), {}, 8 * 32 * 16),
+            OpNode("act", "relu", ("fc1",),
+                   TensorSpec((8, 16), "int32"), {}, 128),
+        ],
+        ("act",),
+    )
+    c = cluster_6d()
+    p = place(g, c)
+    rep = _schedule(g, p, c, 4)
+    ex = AsyncExecutor(g, p, c, rep)
+    tile = jnp.ones((2, 16), jnp.int32)
+    out = ex._stage_fns["act"](tile)
+    jax.block_until_ready(out)
+    with pytest.raises(RuntimeError):
+        _ = tile + 0                      # donated -> buffer invalidated
+    # end-to-end result still exact
+    vals = {"x": jnp.ones((8, 32), jnp.int8),
+            "w": jnp.ones((32, 16), jnp.int8)}
+    np.testing.assert_array_equal(
+        np.asarray(ex(vals)["act"]),
+        np.asarray(emit(g, p, c)(vals)["act"]))
+
+
+def test_streamed_input_eligible_for_donation():
+    """dma_in is a producer, not a consumer: a spec-matched stage reading a
+    streamed activation directly still donates its tile slice."""
+    g = Graph(
+        "sx",
+        {"x": TensorSpec((8, 16), "int32")},
+        [OpNode("act", "relu", ("x",), TensorSpec((8, 16), "int32"),
+                {}, 128)],
+        ("act",),
+    )
+    c = cluster_6b()
+    p = place(g, c)
+    rep = _schedule(g, p, c, 2)
+    ex = AsyncExecutor(g, p, c, rep)
+    tile = jnp.ones((4, 16), jnp.int32)
+    jax.block_until_ready(ex._stage_fns["act"](tile))
+    with pytest.raises(RuntimeError):
+        _ = tile + 0
+    vals = {"x": jnp.arange(128, dtype=jnp.int32).reshape(8, 16) - 64}
+    np.testing.assert_array_equal(
+        np.asarray(ex(vals)["act"]),
+        np.asarray(emit(g, p, c)(vals)["act"]))
+
+
+def test_graph_outputs_never_donated():
+    g = tinyml_graph()
+    c = cluster_6d()
+    p = place(g, c)
+    rep = _schedule(g, p, c, 2)
+    ex = AsyncExecutor(g, p, c, rep)
+    vals = _vals(g)
+    out = ex(vals)["fc"]
+    jax.block_until_ready(out)
+    _ = out + 0                            # outputs stay valid
+
+
+# ------------------------------------------------------------- validation ----
+def test_executor_rejects_indivisible_tiles():
+    g = tinyml_graph(batch=8)
+    c = cluster_6d()
+    p = place(g, c)
+    with pytest.raises(ValueError, match="divisible"):
+        rep = _schedule(g, p, c, 3)
+        AsyncExecutor(g, p, c, rep)
+
+
+def test_device_queue_fifo_and_drain():
+    q = DeviceQueue("dev")
+    fn = jax.jit(lambda a: a * 2)
+    outs = [q.submit(fn, jnp.full((4,), i)) for i in range(5)]
+    assert q.dispatched == 5
+    q.drain()
+    np.testing.assert_array_equal(np.asarray(outs[-1]),
+                                  np.full((4,), 8.0))
