@@ -5,6 +5,7 @@
   table1 — end-to-end TinyML latency (paper Table I)
   cells  — 40-cell LM roofline table (from the dry-run artifacts)
   micro  — kernel micro timings (CSV: name,us_per_call,derived)
+  serve  — continuous-batching decode throughput (per microbatch setting)
 """
 from __future__ import annotations
 
@@ -46,6 +47,12 @@ def main() -> None:
     if which in ("all", "micro"):
         for name, us in kernels_micro.run(verbose=False):
             print(f"micro.{name},{us:.1f},")
+    if which in ("all", "serve"):
+        from benchmarks import serve_bench
+        for r in serve_bench.run(verbose=False):
+            print(f"serve.mb{r['microbatches']},,"
+                  f"tok_per_s={r['tok_per_s']};ticks={r['ticks']};"
+                  f"dispatches={r['dispatches']}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Serve a small model with batched requests: continuous slot-pool decoding
-through ``repro.launch.serve.Server`` (admit -> lockstep decode -> retire).
+"""Serve a small model with batched requests: continuous batching over a
+per-slot KV-cache pool (staggered arrivals, ragged prompt lengths, slot
+reuse), verified bit-identical against single-request reference decodes.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -10,4 +11,5 @@ from repro.launch.serve import main
 if __name__ == "__main__":
     sys.exit(main(["--arch", "smollm_135m", "--reduced", "--batch", "4",
                    "--prompt-len", "8", "--gen", "16",
-                   "--requests", "6", *sys.argv[1:]]))
+                   "--requests", "6", "--stagger", "2", "--vary-prompts",
+                   "--check", *sys.argv[1:]]))

@@ -19,15 +19,38 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Mapping, Sequence
 
 from repro.core.costmodel import AccelCost, ClusterHw, node_cycles
 from repro.core.streamer import Streamer
 
-__all__ = ["AcceleratorSpec", "Task", "riscv_core_spec"]
+__all__ = ["AcceleratorSpec", "Task", "assign_ports", "riscv_core_spec"]
 
 # compute_fn(attrs: dict, *inputs) -> output
 ComputeFn = Callable[..., Any]
+
+
+def assign_ports(spec: "AcceleratorSpec", operand_bytes: Sequence[int],
+                 node_name: str) -> dict[str, tuple[int, ...]]:
+    """Map operands (+ output) to streamer ports in declaration order.
+
+    Returns the per-port dataflow loop bounds (blocks moved).  Raises when
+    the accelerator declares fewer ports than the node moves values — a
+    silent ``zip`` truncation here would drop traffic from the dataflow and
+    the cost model.
+    """
+    if not spec.streamers:
+        return {}
+    ports = list(spec.streamers)
+    if len(ports) < len(operand_bytes):
+        raise ValueError(
+            f"node {node_name!r} on {spec.name!r}: {len(operand_bytes)} "
+            f"operands+output but only {len(ports)} streamer ports — "
+            f"traffic would be dropped from the dataflow/cost model")
+    return {
+        port.name: (math.ceil(nbytes / max(port.block_bytes, 1)),)
+        for port, nbytes in zip(ports, operand_bytes)
+    }
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,14 +3,43 @@
 Each workload op is assigned to the accelerator that supports its kernel
 type, judged by the declared control/kernel descriptions; incompatible
 sections fall back to the RISC-V management core (paper SS V).  When several
-accelerators support a kernel, the fastest datapath for that node wins.
+accelerators support a kernel, candidates are ranked by the **cost model's
+cycle count for that node's actual shape** (compute AND streaming, via
+``Task.cycles``) — a wide datapath starved by narrow ports loses to a
+slower datapath that keeps the node stream-fed.  Accelerators with fewer
+streamer ports than the node moves values cannot carry it and are not
+candidates.
 """
 from __future__ import annotations
 
+from repro.core.accelerator import AcceleratorSpec, Task, assign_ports
 from repro.core.cluster import Cluster
-from repro.core.graph import Graph
+from repro.core.costmodel import ClusterHw
+from repro.core.graph import Graph, OpNode
 
 __all__ = ["place"]
+
+
+def _node_cycles(graph: Graph, node: OpNode, spec: AcceleratorSpec,
+                 hw: ClusterHw) -> int | None:
+    """Total cost-model cycles for the whole (untiled) node on ``spec``,
+    or None when the accelerator cannot carry the node's operands."""
+    operand_bytes = [graph.value_spec(i).nbytes for i in node.inputs] \
+        + [node.out.nbytes]
+    try:
+        dataflow = assign_ports(spec, operand_bytes, node.name)
+    except ValueError:
+        return None
+    task = Task(
+        accel=spec.name,
+        kernel=node.kernel,
+        node=node.name,
+        csr={},
+        dataflow=dataflow,
+        n_ops=max(1, node.n_ops),
+        stream_bytes=sum(operand_bytes),
+    )
+    return task.cycles(spec, hw)["total"]
 
 
 def place(
@@ -26,16 +55,18 @@ def place(
     """
     placement: dict[str, str] = {}
     for node in graph.topo():
-        candidates = [
-            a
-            for a in cluster.supporting(node.kernel)
-            if a.name not in disabled
-        ]
-        if not candidates:
+        ranked = []
+        for a in cluster.supporting(node.kernel):
+            if a.name in disabled:
+                continue
+            cycles = _node_cycles(graph, node, a, cluster.hw)
+            if cycles is not None:
+                ranked.append((cycles, a))
+        if not ranked:
             raise ValueError(
                 f"no device supports kernel {node.kernel!r} for node "
                 f"{node.name!r} (and no host fallback registered)"
             )
-        best = max(candidates, key=lambda a: a.cost.ops_per_cycle)
-        placement[node.name] = best.name
+        # the fastest datapath *for this node* wins (stable on ties)
+        placement[node.name] = min(ranked, key=lambda ca: ca[0])[1].name
     return placement

@@ -20,10 +20,9 @@ Fig. 10 benchmarks:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, Literal
 
-from repro.core.accelerator import Task
+from repro.core.accelerator import Task, assign_ports
 from repro.core.allocation import AllocationPlan
 from repro.core.cluster import Cluster
 from repro.core.graph import Graph, TensorSpec
@@ -85,13 +84,9 @@ def _node_task(graph: Graph, node_name: str, accel_name: str,
         // (n_tiles if _tiled(graph, i, streamed) else 1)
         for i in node.inputs
     ] + [node.out.nbytes // n_tiles]
-    dataflow = {}
-    if spec.streamers:
-        # assign operands to ports in declaration order; output on last port
-        ports = list(spec.streamers)
-        for port, nbytes in zip(ports, operand_bytes):
-            n_blocks = math.ceil(nbytes / max(port.block_bytes, 1))
-            dataflow[port.name] = (n_blocks,)
+    # operands map to ports in declaration order (output on the last
+    # port); raises when the accelerator has too few ports for the node
+    dataflow = assign_ports(spec, operand_bytes, node.name)
     task = Task(
         accel=accel_name,
         kernel=node.kernel,

@@ -99,7 +99,9 @@ class Streamer:
     # ---- budgets / cost --------------------------------------------------
     @property
     def block_bytes(self) -> int:
-        return math.prod(self.block_shape) * self.elem_bits // 8
+        # ceiling division: sub-byte element widths (e.g. int4) still
+        # occupy whole bytes of VMEM footprint and stream bandwidth
+        return -(-(math.prod(self.block_shape) * self.elem_bits) // 8)
 
     @property
     def vmem_bytes(self) -> int:

@@ -1,9 +1,19 @@
-"""Serving launcher: batched prefill + decode loop with a KV-cache pool.
+"""Serving launcher: continuous batching over a per-slot KV-cache pool.
 
-A minimal continuous-batching server core: requests are admitted into free
-cache slots, decoded in lockstep (one fused ``decode_step`` per tick for the
-whole batch), and retired on EOS/length — the standard TPU serving shape
-(static batch, slot reuse) rather than a GPU-style dynamic batcher.
+Requests are admitted into free cache slots and decoded in lockstep (one
+fused ``decode_step`` per tick for the whole batch) — the standard TPU
+serving shape (static batch, slot reuse) rather than a GPU-style dynamic
+batcher.  The cache carries **per-slot position counters**, so:
+
+  * admission is a single batched ``lm.prefill`` dispatch that writes the
+    whole prompt into the new slot's rows (no token-by-token feeding), with
+    ragged ``seq_lens`` masking so concurrent slots are untouched;
+  * slots are truly independent: staggered arrivals, variable prompt
+    lengths, and slot reuse never shift another request's positions —
+    every request's greedy tokens are bit-identical to a single-request
+    reference decode (``solo_reference``, assert with ``--check``);
+  * ``max_len`` is sized by sequence length only (prompt + generation),
+    not by how many admission waves pass through a slot.
 
 ``microbatches > 1`` splits the slot pool into shards, each with its own KV
 cache, and decodes them through the asynchronous pipeline: every active
@@ -11,11 +21,13 @@ shard's decode step is dispatched fire-and-forget on a ``DeviceQueue``
 (riding JAX async dispatch, cache buffers donated per shard), and the host
 synchronizes only when it reads the sampled tokens — the serving-side mirror
 of the SNAX loose-control / tight-data execution model.  Idle shards skip
-their decode entirely.
+their decode entirely; idle *slots* inside an active shard are frozen by
+``seq_lens=0`` masking.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_135m \
-      --reduced --batch 4 --prompt-len 16 --gen 32 --microbatches 2
+      --reduced --batch 4 --prompt-len 16 --gen 32 --microbatches 2 \
+      --stagger 2 --vary-prompts --check
 """
 from __future__ import annotations
 
@@ -32,7 +44,7 @@ from repro.configs.base import reduce as reduce_cfg
 from repro.models import lm
 from repro.runtime.executor import DeviceQueue
 
-__all__ = ["Server", "main"]
+__all__ = ["Server", "Request", "solo_reference", "drain", "main"]
 
 
 @dataclasses.dataclass
@@ -40,20 +52,94 @@ class Request:
     rid: int
     prompt: np.ndarray           # (prompt_len,) int32
     max_new: int
+    arrival: int = 0             # tick at which the request becomes visible
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+def _bucket(n: int, floor: int = 8) -> int:
+    """Next power-of-two prompt width >= n (bounds prefill recompiles)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+_REF_FNS: dict = {}
+
+
+def _ref_fns(cfg):
+    """Per-config jitted (prefill, step) pair — cached so repeated
+    ``solo_reference`` calls (--check over many requests) reuse the same
+    executables instead of recompiling per call."""
+    if cfg not in _REF_FNS:
+        _REF_FNS[cfg] = (
+            jax.jit(lambda p, t, c, sl: lm.prefill_into(p, t, c, cfg,
+                                                        seq_lens=sl)),
+            jax.jit(lambda p, t, c: lm.decode_step(p, t, c, cfg)),
+        )
+    return _REF_FNS[cfg]
+
+
+def solo_reference(cfg, params, prompt, max_new: int, max_len: int, *,
+                   eos_id: int | None = None) -> list[int]:
+    """Greedy tokens for ONE request decoded alone (batch=1) through the
+    same per-slot cache path — the bit-equivalence oracle for ``Server``."""
+    prefill_fn, step = _ref_fns(cfg)
+    caches = lm.init_caches(cfg, 1, max_len)
+    p = len(prompt)
+    toks = np.zeros((1, _bucket(p)), np.int32)   # server-matched padding
+    toks[0, :p] = prompt
+    logits, caches = prefill_fn(params, jnp.asarray(toks), caches,
+                                jnp.asarray([p], np.int32))
+    out = [int(jnp.argmax(logits[0]))]
+    while len(out) < max_new and (eos_id is None or out[-1] != eos_id):
+        lg, caches = step(params, jnp.asarray([[out[-1]]], np.int32),
+                          caches)
+        out.append(int(jnp.argmax(lg[0, 0])))
+    return out
+
+
+def drain(server: "Server", pending: list[Request], *,
+          max_iters: int | None = None) -> list[Request]:
+    """Drive ``server`` until every request retires: admit requests as
+    they arrive (``Request.arrival`` in ticks) and slots free up, tick,
+    collect retirees.  The one canonical serving loop — main(), the
+    serving benchmark, and the tests all drain through here."""
+    pending = list(pending)
+    done: list[Request] = []
+    inflight: list[Request] = []
+    clock = 0
+    while pending or inflight:
+        if max_iters is not None and clock >= max_iters:
+            raise RuntimeError(
+                f"server did not converge in {max_iters} iterations")
+        while pending and pending[0].arrival <= clock \
+                and server.admit(pending[0]):
+            r = pending.pop(0)
+            # a request can finish at admission (max_new == 1 / EOS)
+            (done if r.done else inflight).append(r)
+        server.tick()
+        clock += 1
+        for r in list(inflight):
+            if r.done:
+                inflight.remove(r)
+                done.append(r)
+    return done
+
+
 class Server:
-    """Static-batch continuous decoding over a slot pool.
+    """Continuous batching over a slot pool with per-slot cache positions.
 
     Slots are partitioned into ``microbatches`` shards of ``batch //
     microbatches`` slots; each shard owns an independent KV cache and is
-    decoded as one pipeline task per tick.
+    decoded as one pipeline task per tick.  Admission resets the target
+    slot's cache region and prefills the whole prompt in one dispatch;
+    retirement (EOS or length) frees the slot for immediate reuse.
     """
 
     def __init__(self, cfg, params, *, batch: int, max_len: int,
-                 microbatches: int = 1):
+                 microbatches: int = 1, eos_id: int | None = None):
         if microbatches < 1:
             raise ValueError(f"microbatches must be >= 1, got {microbatches}")
         if batch % microbatches:
@@ -62,75 +148,86 @@ class Server:
         self.cfg, self.params = cfg, params
         self.batch, self.max_len = batch, max_len
         self.microbatches = microbatches
+        self.eos_id = eos_id
         self.mb = batch // microbatches
         self.caches = [lm.init_caches(cfg, self.mb, max_len)
                        for _ in range(microbatches)]
         self.slots: list[Request | None] = [None] * batch
         self._decode = jax.jit(
-            lambda p, t, c: lm.decode_step(p, t, c, cfg),
+            lambda p, t, c, sl: lm.decode_step(p, t, c, cfg, seq_lens=sl),
             donate_argnums=(2,))
+        self._prefill = jax.jit(
+            lambda p, t, c, sl: lm.prefill(p, {"tokens": t}, cfg,
+                                           caches=c, seq_lens=sl),
+            donate_argnums=(2,))
+        self._reset = jax.jit(
+            lambda c, s: lm.reset_slot(c, s, cfg), donate_argnums=(0,))
         self.queue = DeviceQueue("decode")
         self.ticks = 0
 
-    def _shard(self, slot: int) -> int:
-        return slot // self.mb
-
     # ------------------------------------------------------------- admit
     def admit(self, req: Request) -> bool:
+        """Place ``req`` into a free slot: reset the slot's cache region,
+        then prefill the entire prompt in ONE batched dispatch (rows of
+        concurrent requests are masked by ``seq_lens``).  Returns False
+        when no slot is free."""
+        need = len(req.prompt) + req.max_new - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + "
+                f"{req.max_new} generated tokens need {need} cache "
+                f"entries > max_len {self.max_len} — overflowing KV "
+                f"writes would be silently dropped")
         for i, s in enumerate(self.slots):
-            if s is None:
-                self.slots[i] = req
-                # teacher-forced prefill through the decode path keeps the
-                # cache layout identical for all slots.  NOTE: the cache
-                # position counter is shared per shard (lm caches carry one
-                # ``len`` per layer, not per slot), so staggered admits and
-                # slot reuse consume cache length for the whole shard —
-                # ``max_len`` must be sized for the total tokens fed over a
-                # slot's reuse lifetime (see main()).
-                for tok in req.prompt:
-                    self._feed(i, int(tok))
-                # the prefill's final logits predict the first new token;
-                # sample it here rather than re-feeding prompt[-1] (which
-                # would duplicate it in the KV cache).
-                nxt = int(jnp.argmax(self._last_logits[i % self.mb, 0]))
-                req.out.append(nxt)
-                if len(req.out) >= req.max_new:
-                    req.done = True
-                    self.slots[i] = None
-                return True
+            if s is not None:
+                continue
+            shard, row = divmod(i, self.mb)
+            self.slots[i] = req
+            self.caches[shard] = self.queue.submit(
+                self._reset, self.caches[shard], jnp.int32(row))
+            p = len(req.prompt)
+            toks = np.zeros((self.mb, _bucket(p)), np.int32)
+            toks[row, :p] = req.prompt
+            sl = np.zeros((self.mb,), np.int32)
+            sl[row] = p
+            logits, self.caches[shard] = self.queue.submit(
+                self._prefill, self.params, jnp.asarray(toks),
+                self.caches[shard], jnp.asarray(sl))
+            # the prefill's final logits predict the first new token
+            self._append(req, i, int(jnp.argmax(logits[row])))
+            return True
         return False
 
-    def _feed(self, slot: int, token: int):
-        shard = self._shard(slot)
-        toks = np.zeros((self.mb, 1), np.int32)
-        toks[slot % self.mb] = token
-        logits, self.caches[shard] = self.queue.submit(
-            self._decode, self.params, jnp.asarray(toks),
-            self.caches[shard])
-        self._last_logits = logits
+    def _append(self, req: Request, slot: int, tok: int):
+        req.out.append(tok)
+        if (self.eos_id is not None and tok == self.eos_id) \
+                or len(req.out) >= req.max_new:
+            req.done = True
+            self.slots[slot] = None      # retire -> slot reusable
 
     # -------------------------------------------------------------- tick
-    def tick(self):
+    def tick(self) -> bool:
         """One lockstep decode step for every active shard.
 
         All active shards are dispatched before any result is read — the
-        dependency-only barrier is the argmax read at the end.
+        dependency-only barrier is the argmax read at the end.  Idle slots
+        inside an active shard advance nothing (``seq_lens=0``).
         """
         inflight: list[tuple[int, jax.Array]] = []
         for shard in range(self.microbatches):
             toks = np.zeros((self.mb, 1), np.int32)
-            active = False
+            sl = np.zeros((self.mb,), np.int32)
             for j in range(self.mb):
                 req = self.slots[shard * self.mb + j]
                 if req is None or req.done:
                     continue
-                active = True
                 toks[j] = req.out[-1]       # prefill seeded out[0]
-            if not active:
+                sl[j] = 1
+            if not sl.any():
                 continue                     # idle shard: no dispatch
             logits, self.caches[shard] = self.queue.submit(
                 self._decode, self.params, jnp.asarray(toks),
-                self.caches[shard])
+                self.caches[shard], jnp.asarray(sl))
             inflight.append((shard, logits))
         if not inflight:
             return False
@@ -141,10 +238,7 @@ class Server:
                 req = self.slots[i]
                 if req is None or req.done:
                     continue
-                req.out.append(int(nxt[j]))
-                if len(req.out) >= req.max_new:
-                    req.done = True
-                    self.slots[i] = None     # retire -> slot reusable
+                self._append(req, i, int(nxt[j]))
         self.ticks += 1
         return True
 
@@ -158,44 +252,54 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--stagger", type=int, default=0,
+                    help="ticks between request arrivals (0 = all at once)")
+    ap.add_argument("--vary-prompts", action="store_true",
+                    help="draw prompt lengths uniformly in [1, prompt-len]")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="retire a request early when it samples this token")
+    ap.add_argument("--check", action="store_true",
+                    help="assert every request's greedy tokens are "
+                         "bit-identical to its single-request reference")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
     params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
-    # cache positions are shared per shard, so a reused slot keeps
-    # consuming length: size for the number of admission waves.
-    waves = -(-args.requests // args.batch)
-    max_len = waves * (args.prompt_len + args.gen) + 8
+    # per-slot positions: the cache is sized by ONE sequence (prompt +
+    # generation), no matter how many admission waves reuse the slot.
+    max_len = args.prompt_len + args.gen + 8
     server = Server(cfg, params, batch=args.batch, max_len=max_len,
-                    microbatches=args.microbatches)
+                    microbatches=args.microbatches, eos_id=args.eos_id)
 
     rng = np.random.default_rng(0)
-    pending = [
-        Request(i, rng.integers(0, cfg.vocab_size,
-                                args.prompt_len).astype(np.int32),
-                args.gen)
-        for i in range(args.requests)
-    ]
-    done: list[Request] = []
+    pending = []
+    for i in range(args.requests):
+        plen = int(rng.integers(1, args.prompt_len + 1)) \
+            if args.vary_prompts else args.prompt_len
+        pending.append(Request(
+            i, rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            args.gen, arrival=i * args.stagger))
     t0 = time.perf_counter()
-    inflight: list[Request] = []
-    while pending or inflight:
-        while pending and server.admit(pending[0]):
-            inflight.append(pending.pop(0))
-        server.tick()
-        for r in list(inflight):
-            if r.done:
-                inflight.remove(r)
-                done.append(r)
+    done = drain(server, pending)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
           f"{server.ticks} decode ticks, "
           f"{server.queue.dispatched} queue dispatches incl. prefill)")
-    assert all(len(r.out) == args.gen for r in done)
+    if args.eos_id is None:
+        assert all(len(r.out) == r.max_new for r in done)
+    if args.check:
+        for r in done:
+            ref = solo_reference(cfg, params, r.prompt, r.max_new, max_len,
+                                 eos_id=args.eos_id)
+            assert r.out == ref, (
+                f"request {r.rid}: served tokens diverge from the "
+                f"single-request reference\n  got {r.out}\n  ref {ref}")
+        print(f"check: all {len(done)} requests bit-identical to their "
+              f"solo references")
     return 0
 
 

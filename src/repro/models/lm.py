@@ -30,12 +30,12 @@ from repro.models.common import apply_dense, apply_norm, embed_init, \
     make_positions, norm_init
 from repro.models.transformer import (
     AttnArgs, attn_apply, attn_init, block_apply, block_init,
-    init_kv_cache, stack_init,
+    init_kv_cache, reset_kv_slot, stack_init,
 )
 
 __all__ = [
-    "init_params", "loss_fn", "prefill", "decode_step", "init_caches",
-    "input_specs", "count_params", "attn_args",
+    "init_params", "loss_fn", "prefill", "prefill_into", "decode_step",
+    "init_caches", "reset_slot", "input_specs", "count_params", "attn_args",
 ]
 
 
@@ -386,7 +386,12 @@ def _loss_chunked(params, batch, cfg: ArchConfig, *, impl, ce_chunk):
 # ================================================================= serve ==
 def init_caches(cfg: ArchConfig, batch: int, max_len: int, *,
                 enc_len: int = 0, prefilled: int = 0):
-    """Cache pytree (layer-stacked) for decode. ``prefilled`` sets len."""
+    """Cache pytree (layer-stacked) for decode.
+
+    Position counters are **per slot**: every attention cache carries a
+    ``(layers, batch)`` length vector, so each batch row holds its own
+    sequence and can be admitted/retired independently (``prefilled`` seeds
+    every slot's counter)."""
     dt = _cdt(cfg)
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
@@ -395,7 +400,8 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, *,
         caches = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(
                 x, (cfg.n_layers,) + x.shape).copy(), one)
-        caches["len"] = jnp.full((cfg.n_layers,), prefilled, jnp.int32)
+        caches["len"] = jnp.full((cfg.n_layers, batch), prefilled,
+                                 jnp.int32)
         return {"self": caches}
     if fam == "hybrid":
         every = cfg.ssm.shared_attn_every
@@ -411,7 +417,7 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, *,
         attn = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(
                 x, (n_groups,) + x.shape).copy(), attn_one)
-        attn["len"] = jnp.full((n_groups,), prefilled, jnp.int32)
+        attn["len"] = jnp.full((n_groups, batch), prefilled, jnp.int32)
         return {"ssm": ssm, "attn": attn}
     if fam == "ssm":
         pat = cfg.xlstm.pattern
@@ -430,8 +436,8 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, *,
         self_c = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(
                 x, (cfg.encdec.n_dec_layers,) + x.shape).copy(), one)
-        self_c["len"] = jnp.full((cfg.encdec.n_dec_layers,), prefilled,
-                                 jnp.int32)
+        self_c["len"] = jnp.full((cfg.encdec.n_dec_layers, batch),
+                                 prefilled, jnp.int32)
         cross = {
             "k": jnp.zeros((cfg.encdec.n_dec_layers, batch, enc_len,
                             cfg.n_kv_heads, cfg.hd), dt),
@@ -442,10 +448,37 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, *,
     raise ValueError(fam)
 
 
-def decode_step(params, token, caches, cfg: ArchConfig):
-    """One new token (B, 1) against the caches -> (logits, new caches)."""
+def _keep_rows(new, old, keep, batch_axis):
+    """Select rows of ``new`` where ``keep`` (B,) bool, else ``old`` —
+    used to freeze recurrent state for idle serving slots."""
+
+    def one(n, o):
+        shape = [1] * n.ndim
+        shape[batch_axis] = keep.shape[0]
+        return jnp.where(keep.reshape(shape), n, o)
+
+    return jax.tree_util.tree_map(one, new, old)
+
+
+def decode_step(params, token, caches, cfg: ArchConfig, *, seq_lens=None):
+    """New tokens (B, S) against the caches -> (logits, new caches).
+
+    ``S == 1`` is the classic decode step; ``S > 1`` runs chunked prefill
+    through the cache plumbing (attention families; recurrent families are
+    single-token — use ``prefill_into`` for their prompt phase).  Every
+    batch row advances from its own cache position.
+
+    ``seq_lens`` (B,) int32: valid new tokens per row (0 freezes a row
+    entirely — no KV writes, no recurrent-state update, no length advance),
+    enabling ragged prompts and idle slots in a serving batch.
+    """
     fam = cfg.family
     x = _embed(params, token, cfg)
+    if fam not in ("dense", "moe", "vlm", "audio") and token.shape[1] != 1:
+        raise ValueError(
+            f"{fam} decode is single-token recurrent; got S={token.shape[1]}"
+            " (use prefill_into for multi-token prompts)")
+    keep = None if seq_lens is None else seq_lens > 0
     if fam in ("dense", "moe", "vlm"):
         a = attn_args(cfg)
 
@@ -454,7 +487,8 @@ def decode_step(params, token, caches, cfg: ArchConfig):
             c = {"self": cache}
             x, nc, _ = block_apply(lp, x, a, caches=c, act=cfg.act,
                                    norm=cfg.norm, moe_cfg=cfg.moe,
-                                   compute_dtype=_cdt(cfg))
+                                   compute_dtype=_cdt(cfg),
+                                   seq_lens=seq_lens)
             return x, nc["self"]
 
         x, new_self = _scan(body, x, (params["layers"], caches["self"]))
@@ -474,12 +508,16 @@ def decode_step(params, token, caches, cfg: ArchConfig):
             x, new_ssm = _scan(mamba_body, x, (gp, ssm_c))
             x, nc, _ = block_apply(shared, x, a, caches={"self": attn_c},
                                    act=cfg.act, norm=cfg.norm,
-                                   compute_dtype=_cdt(cfg))
+                                   compute_dtype=_cdt(cfg),
+                                   seq_lens=seq_lens)
             return x, (new_ssm, nc["self"])
 
         x, (new_ssm, new_attn) = _scan(
             group_body, x, (params["mamba"], caches["ssm"],
                             caches["attn"]))
+        if keep is not None:
+            # ssm leaves are (n_groups, every, B, ...): freeze idle rows
+            new_ssm = _keep_rows(new_ssm, caches["ssm"], keep, 2)
         new_caches = {"ssm": new_ssm, "attn": new_attn}
     elif fam == "ssm":
         pat = cfg.xlstm.pattern
@@ -495,18 +533,23 @@ def decode_step(params, token, caches, cfg: ArchConfig):
             return x, ncs
 
         x, new_caches = _scan(group_body, x, (params["groups"], caches))
+        if keep is not None:
+            # xlstm leaves are (n_groups, B, ...): freeze idle rows
+            new_caches = _keep_rows(new_caches, caches, keep, 1)
     elif fam == "audio":
         a = dataclasses.replace(attn_args(cfg), use_rope=False)
-        cur = caches["self"]["len"][0]
-        x = x + jax.lax.dynamic_slice_in_dim(
-            _sinusoid(65536, cfg.d_model, x.dtype), cur, 1, axis=0)[None, 0]
+        cur = caches["self"]["len"][0]                       # (B,)
+        pos = cur[:, None] + jnp.arange(token.shape[1], dtype=jnp.int32)
+        x = x + jnp.take(_sinusoid(65536, cfg.d_model, x.dtype),
+                         jnp.clip(pos, 0, 65535), axis=0)
 
         def body(x, inp):
             lp, self_c, ck, cv = inp
             c = {"self": self_c, "cross": {"k": ck, "v": cv,
                                            "len": self_c["len"]}}
             x, nc, _ = block_apply(lp, x, a, caches=c, act="gelu",
-                                   norm="ln", compute_dtype=_cdt(cfg))
+                                   norm="ln", compute_dtype=_cdt(cfg),
+                                   seq_lens=seq_lens)
             return x, nc["self"]
 
         x, new_self = _scan(
@@ -516,6 +559,74 @@ def decode_step(params, token, caches, cfg: ArchConfig):
     else:
         raise ValueError(fam)
     return _unembed(params, x, cfg), new_caches
+
+
+def reset_slot(caches, slot, cfg: ArchConfig):
+    """Zero slot ``slot``'s cache region across every layer/group so the
+    batch row can be reused for a new request with a fixed-size cache.
+
+    ``slot`` may be a traced int32 (admission resets run jitted).  The
+    per-slot ``slot_pos`` map (set to -1) is what logically empties the
+    row; K/V and recurrent state are zeroed so no stale data survives."""
+    fam = cfg.family
+
+    def attn_reset(c):
+        # the single-layer reset invariant, vmapped over the layer/group
+        # axis of the stacked cache
+        return jax.vmap(reset_kv_slot, in_axes=(0, None))(c, slot)
+
+    def zero_rows(tree, batch_axis):
+        def one(x):
+            return x.at[(slice(None),) * batch_axis + (slot,)].set(0)
+
+        return jax.tree_util.tree_map(one, tree)
+
+    if fam in ("dense", "moe", "vlm"):
+        return {"self": attn_reset(caches["self"])}
+    if fam == "hybrid":
+        return {"ssm": zero_rows(caches["ssm"], 2),
+                "attn": attn_reset(caches["attn"])}
+    if fam == "ssm":
+        return zero_rows(caches, 1)
+    if fam == "audio":
+        return {"self": attn_reset(caches["self"]),
+                "cross": zero_rows(caches["cross"], 1)}
+    raise ValueError(fam)
+
+
+def prefill_into(params, tokens, caches, cfg: ArchConfig, *, seq_lens=None):
+    """Teacher-forced prefill of ``tokens`` (B, P) into per-slot caches.
+
+    Returns ``(last_logits (B, V), new caches)`` where ``last_logits[b]``
+    is the logits at each row's final *valid* position — the distribution
+    over its first generated token.  ``seq_lens`` (B,) gives the true
+    prompt length per row (rows may be padded; rows with 0 are untouched).
+
+    Attention families run this as ONE cache-written forward over the full
+    prompt width; recurrent families (hybrid/ssm) scan the prompt token by
+    token inside a single dispatch.
+    """
+    b, p = tokens.shape
+    if seq_lens is None:
+        seq_lens = jnp.full((b,), p, jnp.int32)
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    last_idx = jnp.maximum(seq_lens - 1, 0)[:, None, None]
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        logits, caches = decode_step(params, tokens, caches, cfg,
+                                     seq_lens=seq_lens)
+        last = jnp.take_along_axis(logits, last_idx, axis=1)[:, 0]
+        return last, caches
+
+    def body(carry, t):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        lg, c = decode_step(params, tok, carry, cfg,
+                            seq_lens=(t < seq_lens).astype(jnp.int32))
+        return c, lg[:, 0]
+
+    caches, logits = jax.lax.scan(body, caches, jnp.arange(p))
+    last = jnp.take_along_axis(jnp.moveaxis(logits, 0, 1), last_idx,
+                               axis=1)[:, 0]
+    return last, caches
 
 
 def encode_for_decode(params, frames, cfg: ArchConfig, *, impl="auto"):
@@ -534,10 +645,15 @@ def encode_for_decode(params, frames, cfg: ArchConfig, *, impl="auto"):
     return enc_out, {"k": ks, "v": vs}
 
 
-def prefill(params, batch, cfg: ArchConfig, *, impl="auto"):
+def prefill(params, batch, cfg: ArchConfig, *, impl="auto", caches=None,
+            seq_lens=None):
     """Full-sequence forward returning last-position logits (the dry-run
-    prefill cell).  (Cache write-out is exercised by decode_step tests;
-    the prefill compile cell measures the compute path.)"""
+    prefill cell).  With ``caches`` it is the serving prefill: one batched
+    cache-writing pass via ``prefill_into`` returning
+    ``(last_logits, caches)`` with ragged ``seq_lens`` support."""
+    if caches is not None:
+        return prefill_into(params, batch["tokens"], caches, cfg,
+                            seq_lens=seq_lens)
     logits, _ = forward(params, batch, cfg, impl=impl)
     return logits[:, -1]
 

@@ -25,6 +25,7 @@ from repro.models.common import (
 
 __all__ = [
     "AttnArgs", "attn_init", "attn_apply", "init_kv_cache",
+    "reset_kv_slot",
     "ffn_init", "ffn_apply", "block_init", "block_apply",
     "stack_init", "stack_apply",
 ]
@@ -70,7 +71,14 @@ def attn_init(key, d_model: int, a: AttnArgs, *, qkv_bias=False,
 
 def init_kv_cache(batch: int, max_len: int, a: AttnArgs, dtype,
                   *, ring: bool = False, quant: bool = False):
-    """Decode cache. ``ring=True`` -> sliding-window ring buffer.
+    """Decode cache with **per-slot** position counters.
+
+    Every batch row ("slot") carries its own length counter and its own
+    absolute-position map, so rows can hold sequences of different lengths,
+    be prefixed/advanced independently, and be reset and reused without
+    touching their neighbours — the substrate for continuous batching.
+
+    ``ring=True`` -> sliding-window ring buffer.
     ``quant=True`` -> int8 K/V with per-(token, head) f32 scales: halves
     the decode memory term (decode reads the whole cache every step)."""
     size = min(max_len, a.sliding_window) if (ring and a.sliding_window) \
@@ -79,14 +87,28 @@ def init_kv_cache(batch: int, max_len: int, a: AttnArgs, dtype,
     cache = {
         "k": jnp.zeros((batch, size, a.n_kv, a.hd), kv_dtype),
         "v": jnp.zeros((batch, size, a.n_kv, a.hd), kv_dtype),
-        # absolute position stored per slot (ring); -1 = empty
-        "slot_pos": jnp.full((size,), -1, jnp.int32),
-        "len": jnp.zeros((), jnp.int32),
+        # absolute position stored per (slot, entry); -1 = empty
+        "slot_pos": jnp.full((batch, size), -1, jnp.int32),
+        # tokens cached so far, per slot
+        "len": jnp.zeros((batch,), jnp.int32),
     }
     if quant:
         cache["k_scale"] = jnp.zeros((batch, size, a.n_kv), jnp.float32)
         cache["v_scale"] = jnp.zeros((batch, size, a.n_kv), jnp.float32)
     return cache
+
+
+def reset_kv_slot(cache, slot):
+    """Zero one batch row of a decode cache so the slot is reusable.
+
+    ``slot`` may be a traced int32 — admission resets run jitted.  The
+    position map is what makes the row logically empty (``slot_pos = -1``
+    masks every entry); K/V are zeroed too so a reset slot carries no stale
+    data.
+    """
+    out = {k: v.at[slot].set(0) for k, v in cache.items()}
+    out["slot_pos"] = cache["slot_pos"].at[slot].set(-1)
+    return out
 
 
 def _kv_quantize(x):
@@ -232,10 +254,20 @@ def _xla_flash(q, k, v, scale, *, causal, window, q_chunk=512,
 
 
 def attn_apply(p, x, a: AttnArgs, *, kv_x=None, positions=None, pos3=None,
-               cache=None, compute_dtype=jnp.bfloat16, is_cross=False):
+               cache=None, compute_dtype=jnp.bfloat16, is_cross=False,
+               seq_lens=None):
     """Returns (y, new_cache).  Modes:
-      * cache is None             — full self/cross attention (train/prefill)
-      * cache is not None         — single-token decode step (x: (B,1,D))
+      * cache is None     — full self/cross attention (train/prefill)
+      * cache is not None — cached step (x: (B, S, D)): S == 1 is the decode
+        step, S > 1 is chunked/batched prefill through the same cache
+        plumbing.  Each batch row advances from its **own** ``cache["len"]``
+        counter; rows never share positions.
+
+    ``seq_lens`` (B,) int32, cache mode only: number of *valid* new tokens
+    per row (<= S).  Rows beyond their count write nothing, advance nothing,
+    and are masked out of attention — this is what makes idle slots and
+    ragged prompts harmless to their neighbours in a serving batch.  None
+    means all S tokens are valid for every row.
     """
     b, s, _ = x.shape
     src = x if kv_x is None else kv_x
@@ -276,49 +308,72 @@ def attn_apply(p, x, a: AttnArgs, *, kv_x=None, positions=None, pos3=None,
                          p["o"]["w"].astype(jnp.float32))
         return out.astype(compute_dtype), cache
 
-    # ---------------- decode: one token against the cache ----------------
-    assert s == 1
-    cur = cache.get("len")                         # tokens already cached
+    # ------------- decode / chunked prefill against the cache -------------
+    cur = cache.get("len")                         # (B,) tokens per slot
     if not is_cross:
-        posq = jnp.full((b, 1), cur, jnp.int32)
+        if seq_lens is None:
+            seq_lens = jnp.full((b,), s, jnp.int32)
+        seq_lens = jnp.minimum(seq_lens.astype(jnp.int32), s)
+        offs = jnp.arange(s, dtype=jnp.int32)[None, :]
+        posq = cur[:, None] + offs                 # (B, S) absolute pos
+        token_valid = offs < seq_lens[:, None]     # (B, S) ragged mask
         q = _apply_rope(q, posq, pos3, a)
         k_new = apply_dense(p["k"], src)
         v_new = apply_dense(p["v"], src)
         k_new = _apply_rope(k_new, posq, pos3, a)
         size = cache["k"].shape[1]
-        slot = cur % size if _is_ring(cache, a) else jnp.minimum(
-            cur, size - 1)
+        new_len = cur + seq_lens
+        if _is_ring(cache, a):
+            if s > size:
+                # a wider chunk could retire in-window keys mid-chunk
+                # (early queries would silently lose keys they may attend,
+                # including their own) — prefill ring caches in chunks of
+                # at most the window size
+                raise ValueError(
+                    f"chunked write of {s} tokens exceeds the ring cache "
+                    f"size {size}; split the prefill into <= {size}-token "
+                    f"chunks")
+            # ring: also drop tokens a later token of the same call would
+            # overwrite, so scatter indices stay unique per row
+            idx = posq % size
+            keep = token_valid & (posq >= new_len[:, None] - size)
+        else:
+            idx = posq
+            keep = token_valid & (posq < size)
+        # invalid writes aim at row `size` and are dropped by the scatter
+        idx = jnp.where(keep, idx, size)
+        rows = jnp.arange(b, dtype=jnp.int32)[:, None]
         quant = "k_scale" in cache
         if quant:
             k_q, k_s = _kv_quantize(k_new)
             v_q, v_s = _kv_quantize(v_new)
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k_q, slot, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v_q, slot, axis=1)
-            k_sc = jax.lax.dynamic_update_slice_in_dim(
-                cache["k_scale"], k_s, slot, axis=1)
-            v_sc = jax.lax.dynamic_update_slice_in_dim(
-                cache["v_scale"], v_s, slot, axis=1)
+            kc = cache["k"].at[rows, idx].set(k_q, mode="drop")
+            vc = cache["v"].at[rows, idx].set(v_q, mode="drop")
+            k_sc = cache["k_scale"].at[rows, idx].set(k_s, mode="drop")
+            v_sc = cache["v_scale"].at[rows, idx].set(v_s, mode="drop")
             extra = {"k_scale": k_sc, "v_scale": v_sc}
             k_read = _kv_dequant(kc, k_sc)
             v_read = _kv_dequant(vc, v_sc)
         else:
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], cast(k_new, cache["k"].dtype), slot, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], cast(v_new, cache["v"].dtype), slot, axis=1)
+            kc = cache["k"].at[rows, idx].set(
+                cast(k_new, cache["k"].dtype), mode="drop")
+            vc = cache["v"].at[rows, idx].set(
+                cast(v_new, cache["v"].dtype), mode="drop")
             extra = {}
             k_read = kc.astype(jnp.float32)
             v_read = vc.astype(jnp.float32)
-        slot_pos = cache["slot_pos"].at[slot].set(cur)
+        slot_pos = cache["slot_pos"].at[rows, idx].set(posq, mode="drop")
         new_cache = {**cache, "k": kc, "v": vc, "slot_pos": slot_pos,
-                     "len": cur + 1, **extra}
-        valid = (slot_pos >= 0) & (slot_pos <= cur)
+                     "len": new_len, **extra}
+        # (B, S, T): query i of row b sees row b's entries at positions
+        # [0, posq[b, i]]; empty entries (pos -1) never score.
+        valid = (slot_pos >= 0)[:, None, :] & \
+            (slot_pos[:, None, :] <= posq[:, :, None])
         if a.sliding_window is not None:
-            valid &= cur - slot_pos < a.sliding_window
+            valid &= posq[:, :, None] - slot_pos[:, None, :] \
+                < a.sliding_window
         sc = _gqa_scores(q.astype(jnp.float32), k_read) * scale
-        sc = jnp.where(valid[None, None, None, None, :], sc, NEG)
+        sc = jnp.where(valid[:, None, None, :, :], sc, NEG)
         pr = jax.nn.softmax(sc, axis=-1)
         y = _gqa_out(pr, v_read)
     else:
@@ -388,14 +443,14 @@ def block_init(key, d_model: int, d_ff: int, a: AttnArgs, *,
 
 def block_apply(p, x, a: AttnArgs, *, enc_out=None, positions=None,
                 pos3=None, caches=None, act="swiglu", norm="rms",
-                moe_cfg=None, compute_dtype=jnp.bfloat16):
+                moe_cfg=None, compute_dtype=jnp.bfloat16, seq_lens=None):
     """Returns (x, new_caches, aux_loss)."""
     new_caches = dict(caches) if caches is not None else None
     h, c = attn_apply(
         p["attn"], apply_norm(p["ln1"], x, kind=norm), a,
         positions=positions, pos3=pos3,
         cache=None if caches is None else caches.get("self"),
-        compute_dtype=compute_dtype)
+        compute_dtype=compute_dtype, seq_lens=seq_lens)
     if new_caches is not None:
         new_caches["self"] = c
     x = x + h

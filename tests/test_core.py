@@ -36,6 +36,17 @@ def test_streamer_cost_and_budget():
     assert s.stream_cycles(10) == 10      # 64B = 512 bits -> 1 blk/cycle
 
 
+def test_streamer_sub_byte_block_bytes_ceil():
+    """int4 blocks must round their byte footprint UP, not floor it."""
+    s = Streamer("A", (3,), advance=("m",), elem_bits=4, port_bits=8)
+    assert s.block_bytes == 2          # 12 bits -> 2 bytes (floor gave 1)
+    assert s.vmem_bytes == 4           # double buffered
+    assert s.stream_cycles(5) == 10    # 2 bytes/block over a 1 B/cyc port
+    # byte-aligned widths are unchanged
+    assert Streamer("B", (8, 8), advance=("m", "k"),
+                    elem_bits=8).block_bytes == 64
+
+
 def test_streamer_unknown_loop_rejected():
     from repro.core.streamer import union_grid
     nest = LoopNest(("m",), (4,))
@@ -60,6 +71,65 @@ def test_placement_disabled_ablation():
     c = cluster_6d()
     p = place(g, c, disabled=frozenset({"gemm-accel", "maxpool-accel"}))
     assert set(p.values()) == {"riscv-core"}
+
+
+def test_placement_ranks_by_node_cycles_not_static_throughput():
+    """A wide datapath starved by narrow ports must lose to a slower
+    datapath whose ports keep the node stream-fed (per-node cost ranking,
+    not static ops_per_cycle)."""
+    from repro.core import AccelCost, AcceleratorSpec, ClusterHw
+    fns = {"dense": lambda attrs, x, w: x}
+    starved = AcceleratorSpec(
+        name="wide-but-starved", kernels=("dense",), compute_fns=fns,
+        cost=AccelCost(ops_per_cycle=4096),
+        streamers=(
+            Streamer("A", (8, 8), advance=("m", "k"), elem_bits=8,
+                     port_bits=8),          # 64 cycles per 64 B block
+            Streamer("B", (8, 8), advance=("k", "n"), elem_bits=8,
+                     port_bits=8),
+            Streamer("O", (8, 8), advance=("m", "n"), elem_bits=8,
+                     port_bits=8),
+        ))
+    fed = AcceleratorSpec(
+        name="narrow-but-fed", kernels=("dense",), compute_fns=fns,
+        cost=AccelCost(ops_per_cycle=512),
+        streamers=(
+            Streamer("A", (8, 8), advance=("m", "k"), elem_bits=8,
+                     port_bits=512),        # 1 cycle per block
+            Streamer("B", (8, 8), advance=("k", "n"), elem_bits=8,
+                     port_bits=512),
+            Streamer("O", (8, 8), advance=("m", "n"), elem_bits=8,
+                     port_bits=512),
+        ))
+    g = Graph("g", {"x": TensorSpec((64, 64), "int8"),
+                    "w": TensorSpec((64, 64), "int8")},
+              [OpNode("fc", "dense", ("x", "w"),
+                      TensorSpec((64, 64), "int8"), {}, 64 * 64 * 64)],
+              ("fc",))
+    c = Cluster("rank", [starved, fed], ClusterHw())
+    # old behavior (max ops_per_cycle) would pick the starved datapath
+    assert place(g, c)["fc"] == "narrow-but-fed"
+
+
+def test_placement_skips_port_deficient_candidate():
+    """An accelerator with too few streamer ports for the node's operands
+    cannot carry it; placement must fall through to a capable device."""
+    from repro.core import AccelCost, AcceleratorSpec, ClusterHw, \
+        riscv_core_spec
+    fns = {"dense": lambda attrs, x, w: x}
+    hw = ClusterHw()
+    one_port = AcceleratorSpec(
+        name="one-port", kernels=("dense",), compute_fns=fns,
+        cost=AccelCost(ops_per_cycle=4096),
+        streamers=(Streamer("A", (8, 8), advance=("m", "k"),
+                            elem_bits=8),))
+    g = Graph("g", {"x": TensorSpec((8, 8), "int8"),
+                    "w": TensorSpec((8, 8), "int8")},
+              [OpNode("fc", "dense", ("x", "w"),
+                      TensorSpec((8, 8), "int8"), {}, 512)],
+              ("fc",))
+    c = Cluster("deficient", [one_port, riscv_core_spec(fns, hw)], hw)
+    assert place(g, c)["fc"] == "riscv-core"
 
 
 def test_placement_no_device_raises():
@@ -117,6 +187,28 @@ def test_schedule_rejects_mismatched_plan():
     bad_plan = allocate(other, c, n_tiles=1, streamed=("x",))
     with pytest.raises(ValueError, match="missing SPM buffers"):
         build_schedule(g, p, c, plan=bad_plan, n_tiles=8, streamed=("x",))
+
+
+def test_schedule_too_few_ports_raises():
+    """A node whose operands+output outnumber the placed accelerator's
+    streamer ports must fail loudly (silent zip truncation dropped the
+    overflow traffic from the dataflow/cost model)."""
+    from repro.core import AccelCost, AcceleratorSpec, ClusterHw
+    fns = {"dense": lambda attrs, x, w: x}
+    one_port = AcceleratorSpec(
+        name="one-port", kernels=("dense",), compute_fns=fns,
+        cost=AccelCost(ops_per_cycle=64),
+        streamers=(Streamer("A", (8, 8), advance=("m", "k"),
+                            elem_bits=8),))
+    g = Graph("g", {"x": TensorSpec((8, 8), "int8"),
+                    "w": TensorSpec((8, 8), "int8")},
+              [OpNode("fc", "dense", ("x", "w"),
+                      TensorSpec((8, 8), "int8"), {}, 512)],
+              ("fc",))
+    c = Cluster("oneport", [one_port], ClusterHw())
+    with pytest.raises(ValueError, match=r"'fc' on 'one-port'.*3 "
+                                         r"operands.*1 streamer port"):
+        build_schedule(g, {"fc": "one-port"}, c, n_tiles=1, streamed=("x",))
 
 
 def test_pipelined_beats_sequential():
