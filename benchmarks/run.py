@@ -5,7 +5,7 @@
   table1 — end-to-end TinyML latency (paper Table I)
   cells  — 40-cell LM roofline table (from the dry-run artifacts)
   micro  — kernel micro timings (CSV: name,us_per_call,derived)
-  serve  — continuous-batching decode throughput (per microbatch setting)
+  serve  — continuous-batching throughput, dense vs paged+prefix-reuse
 """
 from __future__ import annotations
 
@@ -50,9 +50,13 @@ def main() -> None:
     if which in ("all", "serve"):
         from benchmarks import serve_bench
         for r in serve_bench.run(verbose=False):
-            print(f"serve.mb{r['microbatches']},,"
+            extra = (f";hit_rate={r['hit_rate']};"
+                     f"skipped={r['prefill_tokens_skipped']}"
+                     if r["layout"] == "paged" else "")
+            print(f"serve.{r['layout']}_mb{r['microbatches']},,"
                   f"tok_per_s={r['tok_per_s']};ticks={r['ticks']};"
-                  f"dispatches={r['dispatches']}")
+                  f"dispatches={r['dispatches']};"
+                  f"p99_ms={r['tick_p99_ms']}{extra}")
 
 
 if __name__ == "__main__":

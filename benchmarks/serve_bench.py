@@ -1,13 +1,22 @@
-"""Continuous-batching serving benchmark.
+"""Continuous-batching serving benchmark: paged KV + prefix reuse.
 
-Drives ``repro.launch.serve.Server`` with a staggered, ragged-prompt
-request stream (requests >> batch, fixed sequence-sized ``max_len``) and
-reports decode throughput per microbatch setting — the serving-side
-counterpart of the Fig. 8 measured-overlap column.  With ``check=True``
-every request is verified bit-identical to its single-request reference.
+Drives ``repro.launch.serve.Server`` with a staggered, shared-prefix
+request stream (requests >> batch, every prompt opening with the same
+system-prompt tokens) and compares the dense per-slot KV layout against
+the paged layout with prefix-tree reuse.  The paged rows show the work
+the radix cache removes: ``prefill_tokens_skipped`` counts prompt tokens
+served straight from shared pages instead of being recomputed.
+
+Reported per scenario: decode throughput (tok/s), tick latency p50/p99,
+prefix-cache hit rate, and page-pool occupancy.  With ``check=True``
+every request is additionally verified bit-identical to its dense
+single-request reference.  ``python benchmarks/serve_bench.py`` writes
+the full result set to ``benchmarks/BENCH_serve.json``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -18,23 +27,38 @@ from repro.configs.base import reduce as reduce_cfg
 from repro.launch.serve import Request, Server, drain, solo_reference
 from repro.models import lm
 
+_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "BENCH_serve.json")
 
-def run(arch: str = "smollm_135m", *, batch: int = 4, prompt_len: int = 12,
+
+def _workload(cfg, requests, prompt_len, shared_prefix, seed=0):
+    """Prompts that share their first ``shared_prefix`` tokens and carry
+    random tails of varying length (total length <= ``prompt_len``)."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, shared_prefix).astype(np.int32)
+    max_tail = max(prompt_len - shared_prefix, 1)
+    return [np.concatenate([shared,
+                            rng.integers(0, cfg.vocab_size,
+                                         int(rng.integers(1, max_tail + 1))
+                                         ).astype(np.int32)])
+            for _ in range(requests)]
+
+
+def run(arch: str = "smollm_135m", *, batch: int = 4, prompt_len: int = 16,
         gen: int = 16, requests: int = 12, stagger: int = 1,
-        microbatch_settings: tuple[int, ...] = (1, 2),
-        check: bool = False, verbose: bool = True) -> list[dict]:
+        shared_prefix: int = 9, microbatch_settings: tuple[int, ...] = (1, 2),
+        check: bool = False, verbose: bool = True,
+        out_json: str | None = None) -> list[dict]:
     cfg = reduce_cfg(configs.get(arch))
     params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
     max_len = prompt_len + gen + 8
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size,
-                            int(rng.integers(1, prompt_len + 1))
-                            ).astype(np.int32)
-               for _ in range(requests)]
+    prompts = _workload(cfg, requests, prompt_len, shared_prefix)
+    scenarios = [("dense", 1, False)] + [("paged", mb, True)
+                                         for mb in microbatch_settings]
     rows = []
-    for mb in microbatch_settings:
+    for layout, mb, paged in scenarios:
         server = Server(cfg, params, batch=batch, max_len=max_len,
-                        microbatches=mb)
+                        microbatches=mb, paged=paged)
         pending = [Request(i, p, gen, arrival=i * stagger)
                    for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
@@ -44,8 +68,10 @@ def run(arch: str = "smollm_135m", *, batch: int = 4, prompt_len: int = 12,
             for r in done:
                 ref = solo_reference(cfg, params, r.prompt, gen, max_len)
                 assert r.out == ref, (r.rid, r.out, ref)
+        st = server.stats()
         total = sum(len(r.out) for r in done)
-        rows.append({
+        row = {
+            "layout": layout,
             "microbatches": mb,
             "requests": len(done),
             "tokens": total,
@@ -53,14 +79,41 @@ def run(arch: str = "smollm_135m", *, batch: int = 4, prompt_len: int = 12,
             "tok_per_s": round(total / dt, 1),
             "ticks": server.ticks,
             "dispatches": server.queue.dispatched,
-        })
+            "tick_p50_ms": st["tick_p50_ms"],
+            "tick_p99_ms": st["tick_p99_ms"],
+            "prefill_tokens": st["prefill_tokens"],
+            "prefill_tokens_skipped": st["prefill_tokens_skipped"],
+        }
+        if paged:
+            row.update({k: st[k] for k in
+                        ("prefix_hits", "hit_rate", "pages_in_use",
+                         "peak_pages_in_use", "page_size", "pool_pages")})
+        rows.append(row)
         if verbose:
-            r = rows[-1]
-            print(f"serve mb={mb}: {r['tokens']} tok in {r['wall_s']}s "
-                  f"({r['tok_per_s']} tok/s, {r['ticks']} ticks, "
-                  f"{r['dispatches']} dispatches)")
+            extra = (f", hit_rate={row['hit_rate']}, "
+                     f"skipped={row['prefill_tokens_skipped']} prefill tok"
+                     if paged else "")
+            print(f"serve {layout} mb={mb}: {total} tok in {row['wall_s']}s"
+                  f" ({row['tok_per_s']} tok/s, p50 {row['tick_p50_ms']}ms"
+                  f", p99 {row['tick_p99_ms']}ms{extra})")
+    if out_json:
+        payload = {
+            "arch": arch,
+            "date": time.strftime("%Y-%m-%d"),
+            "workload": {"batch": batch, "prompt_len": prompt_len,
+                         "gen": gen, "requests": requests,
+                         "stagger": stagger,
+                         "shared_prefix": shared_prefix,
+                         "max_len": max_len, "checked": check},
+            "rows": rows,
+        }
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        if verbose:
+            print(f"wrote {out_json}")
     return rows
 
 
 if __name__ == "__main__":
-    run(check=True)
+    run(check=True, out_json=_JSON)

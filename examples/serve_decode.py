@@ -1,6 +1,9 @@
 """Serve a small model with batched requests: continuous batching over a
-per-slot KV-cache pool (staggered arrivals, ragged prompt lengths, slot
-reuse), verified bit-identical against single-request reference decodes.
+paged KV cache with prefix-tree reuse (staggered arrivals, ragged prompt
+lengths, slot reuse), verified bit-identical against single-request
+dense-layout reference decodes.  Add ``--shared-prefix 6 --page-size 4``
+to watch the prefix cache skip prefill work (a shared prefix only helps
+once it covers full pages); see docs/serving.md for the contract.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """

@@ -87,6 +87,13 @@ class ArchConfig:
     n_patches: int = 0           # vlm: patch embeddings per sample
     sliding_window: int | None = None    # long-context attention window
     kv_quant: bool = False       # int8 KV cache (serving memory-term win)
+    # paged-KV serving knobs (0 = layout/pool default). ``kv_page_size``
+    # is the tokens-per-page granularity of the paged cache layout;
+    # ``kv_pool_pages`` the per-layer page-pool capacity — size it above
+    # batch * ceil(max_len / page_size) to let the serving prefix tree
+    # retain shared-prompt pages past request retirement.
+    kv_page_size: int = 0
+    kv_pool_pages: int = 0
     subquadratic: bool = False   # eligible for the long_500k cell
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"

@@ -1,33 +1,40 @@
-"""Serving launcher: continuous batching over a per-slot KV-cache pool.
+"""Serving launcher: continuous batching over a paged KV-cache pool with
+prefix-tree reuse.
 
 Requests are admitted into free cache slots and decoded in lockstep (one
 fused ``decode_step`` per tick for the whole batch) — the standard TPU
 serving shape (static batch, slot reuse) rather than a GPU-style dynamic
-batcher.  The cache carries **per-slot position counters**, so:
+batcher.  See ``docs/serving.md`` for the full architecture; the short
+version:
 
-  * admission is a single batched ``lm.prefill`` dispatch that writes the
-    whole prompt into the new slot's rows (no token-by-token feeding), with
-    ragged ``seq_lens`` masking so concurrent slots are untouched;
+  * the KV cache is **paged**: a fixed per-layer page pool plus per-slot
+    page tables (``models/transformer.init_kv_cache``), with host-side
+    refcounted allocation (``repro.serving.PagePool``);
+  * a **radix tree** over full-page token runs (``repro.serving.
+    PrefixTree``) maps prompt prefixes to page runs, so admission starts
+    each request from its longest cached prefix and prefills only the
+    unshared tail — shared system prompts are stored and computed once;
+  * retirement releases the slot's page references; pages retained only
+    by the tree are LRU-evicted when the pool runs dry, and pages still
+    referenced by an active slot are never reclaimed;
   * slots are truly independent: staggered arrivals, variable prompt
-    lengths, and slot reuse never shift another request's positions —
-    every request's greedy tokens are bit-identical to a single-request
-    reference decode (``solo_reference``, assert with ``--check``);
-  * ``max_len`` is sized by sequence length only (prompt + generation),
-    not by how many admission waves pass through a slot.
+    lengths, prefix sharing, and slot reuse never shift another request's
+    positions — every request's greedy tokens are bit-identical to a
+    single-request reference decode (``solo_reference``, which runs on
+    the *dense* cache layout, so ``--check`` is a cross-layout oracle).
 
-``microbatches > 1`` splits the slot pool into shards, each with its own KV
-cache, and decodes them through the asynchronous pipeline: every active
-shard's decode step is dispatched fire-and-forget on a ``DeviceQueue``
-(riding JAX async dispatch, cache buffers donated per shard), and the host
-synchronizes only when it reads the sampled tokens — the serving-side mirror
-of the SNAX loose-control / tight-data execution model.  Idle shards skip
-their decode entirely; idle *slots* inside an active shard are frozen by
-``seq_lens=0`` masking.
+``microbatches > 1`` splits the slot pool into shards, each with its own
+cache/pool/tree, and decodes them through the asynchronous pipeline: every
+active shard's decode step is dispatched fire-and-forget on a
+``DeviceQueue`` (riding JAX async dispatch, cache buffers donated per
+shard), and the host synchronizes only when it reads the sampled tokens —
+the serving-side mirror of the SNAX loose-control / tight-data execution
+model.  Prefixes are shared within a shard (pools are per-shard arrays).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_135m \
       --reduced --batch 4 --prompt-len 16 --gen 32 --microbatches 2 \
-      --stagger 2 --vary-prompts --check
+      --stagger 2 --vary-prompts --shared-prefix 9 --check
 """
 from __future__ import annotations
 
@@ -43,8 +50,14 @@ import repro.configs as configs
 from repro.configs.base import reduce as reduce_cfg
 from repro.models import lm
 from repro.runtime.executor import DeviceQueue
+from repro.serving import PagePool, PrefixTree
 
 __all__ = ["Server", "Request", "solo_reference", "drain", "main"]
+
+# families whose serving cache supports the paged layout (token-prompt
+# attention models); recurrent families keep dense/recurrent state and
+# opt out via the seq_lens keep-mask path
+_PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclasses.dataclass
@@ -55,6 +68,10 @@ class Request:
     arrival: int = 0             # tick at which the request becomes visible
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # filled in by paged admission: tokens actually prefilled (the
+    # unshared tail) and tokens served from the prefix cache
+    prefill_len: int = -1
+    shared_len: int = 0
 
 
 def _bucket(n: int, floor: int = 8) -> int:
@@ -84,7 +101,10 @@ def _ref_fns(cfg):
 def solo_reference(cfg, params, prompt, max_new: int, max_len: int, *,
                    eos_id: int | None = None) -> list[int]:
     """Greedy tokens for ONE request decoded alone (batch=1) through the
-    same per-slot cache path — the bit-equivalence oracle for ``Server``."""
+    **dense** per-slot cache path — the bit-equivalence oracle for
+    ``Server``.  A paged server being checked against a dense reference
+    makes ``--check`` a cross-layout oracle: page indirection, prefix
+    sharing, and pool reuse must all be invisible in the tokens."""
     prefill_fn, step = _ref_fns(cfg)
     caches = lm.init_caches(cfg, 1, max_len)
     p = len(prompt)
@@ -129,17 +149,25 @@ def drain(server: "Server", pending: list[Request], *,
 
 
 class Server:
-    """Continuous batching over a slot pool with per-slot cache positions.
+    """Continuous batching over a slot pool with paged, prefix-shared KV.
 
     Slots are partitioned into ``microbatches`` shards of ``batch //
-    microbatches`` slots; each shard owns an independent KV cache and is
-    decoded as one pipeline task per tick.  Admission resets the target
-    slot's cache region and prefills the whole prompt in one dispatch;
-    retirement (EOS or length) frees the slot for immediate reuse.
+    microbatches`` slots; each shard owns an independent cache (and, when
+    paged, its own ``PagePool`` + ``PrefixTree``) and is decoded as one
+    pipeline task per tick.  Admission matches the prompt against the
+    shard's prefix tree, installs shared + freshly-allocated pages into
+    the slot's page table, and prefills only the unshared tail in one
+    dispatch; retirement (EOS or length) releases the slot's page
+    references and frees the slot for immediate reuse.
+
+    ``paged=False`` (or a non-attention family) falls back to the dense
+    per-slot layout of PR 2 — same admission/tick flow, no sharing.
     """
 
     def __init__(self, cfg, params, *, batch: int, max_len: int,
-                 microbatches: int = 1, eos_id: int | None = None):
+                 microbatches: int = 1, eos_id: int | None = None,
+                 paged: bool | None = None, page_size: int = 0,
+                 pool_pages: int = 0):
         if microbatches < 1:
             raise ValueError(f"microbatches must be >= 1, got {microbatches}")
         if batch % microbatches:
@@ -150,9 +178,30 @@ class Server:
         self.microbatches = microbatches
         self.eos_id = eos_id
         self.mb = batch // microbatches
-        self.caches = [lm.init_caches(cfg, self.mb, max_len)
-                       for _ in range(microbatches)]
+        if paged is None:
+            paged = cfg.family in _PAGED_FAMILIES
+        elif paged and cfg.family not in _PAGED_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family} does not support the paged KV cache")
+        self.paged = paged
+        if paged:
+            self.page_size = page_size or cfg.kv_page_size or 8
+            self.n_slot_pages = -(-max_len // self.page_size)
+            # default pool: 2x the dense-equivalent footprint, so the
+            # prefix tree can retain shared prompts past retirement
+            self.pool_pages = (pool_pages or cfg.kv_pool_pages
+                               or 2 * self.mb * self.n_slot_pages)
+            self.pools = [PagePool(self.pool_pages, self.page_size)
+                          for _ in range(microbatches)]
+            self.trees = [PrefixTree(pool) for pool in self.pools]
+        self.caches = [
+            lm.init_caches(cfg, self.mb, max_len, paged=paged,
+                           page_size=getattr(self, "page_size", 0),
+                           n_pages=getattr(self, "pool_pages", 0))
+            for _ in range(microbatches)]
         self.slots: list[Request | None] = [None] * batch
+        # pages referenced by each slot's table (paged mode bookkeeping)
+        self.slot_pages: list[list[int] | None] = [None] * batch
         self._decode = jax.jit(
             lambda p, t, c, sl: lm.decode_step(p, t, c, cfg, seq_lens=sl),
             donate_argnums=(2,))
@@ -162,15 +211,34 @@ class Server:
             donate_argnums=(2,))
         self._reset = jax.jit(
             lambda c, s: lm.reset_slot(c, s, cfg), donate_argnums=(0,))
+        self._install = jax.jit(
+            lambda c, s, t, n: lm.install_pages(c, s, t, n, cfg),
+            donate_argnums=(0,))
         self.queue = DeviceQueue("decode")
         self.ticks = 0
+        # observability: admission + prefix-cache counters, tick latencies
+        self.admitted = 0
+        self.prefix_hits = 0
+        self.prefill_tokens = 0
+        self.prefill_tokens_skipped = 0
+        self.deferred_admissions = 0
+        self.peak_pages_in_use = 0
+        self.tick_wall_s: list[float] = []
 
     # ------------------------------------------------------------- admit
     def admit(self, req: Request) -> bool:
-        """Place ``req`` into a free slot: reset the slot's cache region,
-        then prefill the entire prompt in ONE batched dispatch (rows of
-        concurrent requests are masked by ``seq_lens``).  Returns False
-        when no slot is free."""
+        """Place ``req`` into a free slot.
+
+        Paged flow: match the prompt against the shard's prefix tree
+        (longest run of full cached pages, capped so at least the final
+        prompt token is left to prefill), retain the matched pages,
+        allocate private pages for the tail + generation (LRU-evicting
+        tree-only pages if the pool is dry), install the page table, and
+        prefill **only the unshared tail** in ONE batched dispatch (rows
+        of concurrent requests are masked by ``seq_lens``).  Afterwards
+        the prompt's full pages are inserted into the tree so the next
+        request can start from them.  Returns False when no slot is free
+        or the shard's pool cannot currently hold the request."""
         need = len(req.prompt) + req.max_new - 1
         if need > self.max_len:
             raise ValueError(
@@ -182,21 +250,90 @@ class Server:
             if s is not None:
                 continue
             shard, row = divmod(i, self.mb)
+            if self.paged:
+                # a dry pool defers only this shard — later free slots
+                # (other shards, other pools) may still admit
+                if self._admit_paged(req, i, shard, row, need):
+                    return True
+                continue
             self.slots[i] = req
             self.caches[shard] = self.queue.submit(
                 self._reset, self.caches[shard], jnp.int32(row))
             p = len(req.prompt)
-            toks = np.zeros((self.mb, _bucket(p)), np.int32)
-            toks[row, :p] = req.prompt
-            sl = np.zeros((self.mb,), np.int32)
-            sl[row] = p
-            logits, self.caches[shard] = self.queue.submit(
-                self._prefill, self.params, jnp.asarray(toks),
-                self.caches[shard], jnp.asarray(sl))
-            # the prefill's final logits predict the first new token
-            self._append(req, i, int(jnp.argmax(logits[row])))
+            req.prefill_len, req.shared_len = p, 0
+            self._dispatch_prefill(req, shard, row, req.prompt)
+            self.admitted += 1
+            self.prefill_tokens += p
             return True
         return False
+
+    def _admit_paged(self, req: Request, slot: int, shard: int, row: int,
+                     need: int) -> bool:
+        pool, tree = self.pools[shard], self.trees[shard]
+        n_total = -(-need // self.page_size)
+        if n_total > self.pool_pages:
+            raise ValueError(
+                f"request {req.rid} needs {n_total} pages > pool capacity "
+                f"{self.pool_pages} — it could never be admitted")
+        shared, shared_len = tree.match(req.prompt)
+        n_priv = n_total - len(shared)
+        if pool.free_pages < n_priv:
+            tree.evict(n_priv - pool.free_pages)
+        priv = pool.alloc(n_priv)
+        if priv is None:
+            # every evictable page is pinned by an active request: defer
+            # admission (a later retirement will release pages)
+            pool.release(shared)
+            self.deferred_admissions += 1
+            return False
+        table = shared + priv
+        self.slots[slot] = req
+        self.slot_pages[slot] = table
+        row_table = np.full((self.n_slot_pages,), -1, np.int32)
+        row_table[:len(table)] = table
+        self.caches[shard] = self.queue.submit(
+            self._install, self.caches[shard], jnp.int32(row),
+            jnp.asarray(row_table), jnp.int32(shared_len))
+        # cache the prompt's full pages for future admissions BEFORE the
+        # prefill can retire the request (max_new == 1) and release its
+        # slot references — the tree's retain must land first.  Content-
+        # wise this is safe: the pages' K/V writes are queued ahead of
+        # any later admission's reads by JAX dispatch order.
+        tree.insert(req.prompt, table)
+        tail = req.prompt[shared_len:]
+        req.prefill_len, req.shared_len = len(tail), shared_len
+        self._dispatch_prefill(req, shard, row, tail, slot_idx=slot)
+        self.admitted += 1
+        self.prefix_hits += shared_len > 0
+        self.prefill_tokens += len(tail)
+        self.prefill_tokens_skipped += shared_len
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+        return True
+
+    def _dispatch_prefill(self, req: Request, shard: int, row: int,
+                          tail, slot_idx: int | None = None):
+        p = len(tail)
+        toks = np.zeros((self.mb, _bucket(p)), np.int32)
+        toks[row, :p] = tail
+        sl = np.zeros((self.mb,), np.int32)
+        sl[row] = p
+        logits, self.caches[shard] = self.queue.submit(
+            self._prefill, self.params, jnp.asarray(toks),
+            self.caches[shard], jnp.asarray(sl))
+        # the prefill's final logits predict the first new token
+        idx = slot_idx if slot_idx is not None else shard * self.mb + row
+        self._append(req, idx, int(jnp.argmax(logits[row])))
+
+    # ---------------------------------------------------------- retire
+    def _release_slot(self, slot: int):
+        """Return the slot's page references to its shard's pool —
+        the page-leak fix: without this, slot reuse pins every page a
+        retired request ever touched until the pool exhausts."""
+        pages = self.slot_pages[slot]
+        if pages is not None:
+            self.pools[slot // self.mb].release(pages)
+            self.slot_pages[slot] = None
 
     def _append(self, req: Request, slot: int, tok: int):
         req.out.append(tok)
@@ -204,6 +341,7 @@ class Server:
                 or len(req.out) >= req.max_new:
             req.done = True
             self.slots[slot] = None      # retire -> slot reusable
+            self._release_slot(slot)
 
     # -------------------------------------------------------------- tick
     def tick(self) -> bool:
@@ -213,6 +351,7 @@ class Server:
         dependency-only barrier is the argmax read at the end.  Idle slots
         inside an active shard advance nothing (``seq_lens=0``).
         """
+        t0 = time.perf_counter()
         inflight: list[tuple[int, jax.Array]] = []
         for shard in range(self.microbatches):
             toks = np.zeros((self.mb, 1), np.int32)
@@ -240,7 +379,40 @@ class Server:
                     continue
                 self._append(req, i, int(nxt[j]))
         self.ticks += 1
+        self.tick_wall_s.append(time.perf_counter() - t0)
         return True
+
+    # ------------------------------------------------------------- stats
+    @property
+    def pages_in_use(self) -> int:
+        return sum(p.used_pages for p in self.pools) if self.paged else 0
+
+    def stats(self) -> dict:
+        """Serving counters for benchmarks/tests: prefix-cache hit rate,
+        prefill work skipped, pool occupancy, tick latency percentiles."""
+        ticks = np.asarray(self.tick_wall_s or [0.0])
+        out = {
+            "admitted": self.admitted,
+            "ticks": self.ticks,
+            "tick_p50_ms": round(float(np.percentile(ticks, 50)) * 1e3, 3),
+            "tick_p99_ms": round(float(np.percentile(ticks, 99)) * 1e3, 3),
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
+            "paged": self.paged,
+        }
+        if self.paged:
+            out.update({
+                "page_size": self.page_size,
+                "pool_pages": self.pool_pages * self.microbatches,
+                "pages_in_use": self.pages_in_use,
+                "peak_pages_in_use": self.peak_pages_in_use,
+                "prefix_hits": self.prefix_hits,
+                "hit_rate": round(self.prefix_hits
+                                  / max(self.admitted, 1), 3),
+                "deferred_admissions": self.deferred_admissions,
+                "tree_nodes": sum(t.nodes for t in self.trees),
+            })
+        return out
 
 
 def main(argv=None):
@@ -256,11 +428,25 @@ def main(argv=None):
                     help="ticks between request arrivals (0 = all at once)")
     ap.add_argument("--vary-prompts", action="store_true",
                     help="draw prompt lengths uniformly in [1, prompt-len]")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request the same first N prompt "
+                         "tokens (the shared-system-prompt workload; "
+                         "prompt lengths stay >= N+1)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="retire a request early when it samples this token")
+    ap.add_argument("--dense", action="store_true",
+                    help="use the dense per-slot KV layout instead of the "
+                         "paged pool (no prefix reuse)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page (0 = config default or 8)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool capacity per shard (0 = 2x the dense-"
+                         "equivalent slot footprint)")
     ap.add_argument("--check", action="store_true",
                     help="assert every request's greedy tokens are "
-                         "bit-identical to its single-request reference")
+                         "bit-identical to its single-request reference "
+                         "(decoded through the DENSE layout: a cross-"
+                         "layout oracle)")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -271,16 +457,23 @@ def main(argv=None):
     # generation), no matter how many admission waves reuse the slot.
     max_len = args.prompt_len + args.gen + 8
     server = Server(cfg, params, batch=args.batch, max_len=max_len,
-                    microbatches=args.microbatches, eos_id=args.eos_id)
+                    microbatches=args.microbatches, eos_id=args.eos_id,
+                    paged=False if args.dense else None,
+                    page_size=args.page_size, pool_pages=args.pool_pages)
 
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size,
+                          args.shared_prefix).astype(np.int32)
     pending = []
     for i in range(args.requests):
-        plen = int(rng.integers(1, args.prompt_len + 1)) \
-            if args.vary_prompts else args.prompt_len
+        lo = args.shared_prefix + 1
+        plen = int(rng.integers(lo, args.prompt_len + 1)) \
+            if args.vary_prompts else max(args.prompt_len, lo)
+        tail = rng.integers(0, cfg.vocab_size,
+                            plen - args.shared_prefix).astype(np.int32)
         pending.append(Request(
-            i, rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
-            args.gen, arrival=i * args.stagger))
+            i, np.concatenate([shared, tail]), args.gen,
+            arrival=i * args.stagger))
     t0 = time.perf_counter()
     done = drain(server, pending)
     dt = time.perf_counter() - t0
@@ -289,6 +482,7 @@ def main(argv=None):
           f"{dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
           f"{server.ticks} decode ticks, "
           f"{server.queue.dispatched} queue dispatches incl. prefill)")
+    print(f"stats: {server.stats()}")
     if args.eos_id is None:
         assert all(len(r.out) == r.max_new for r in done)
     if args.check:
@@ -300,6 +494,12 @@ def main(argv=None):
                 f"single-request reference\n  got {r.out}\n  ref {ref}")
         print(f"check: all {len(done)} requests bit-identical to their "
               f"solo references")
+        if args.shared_prefix and not args.dense:
+            skipped = server.prefill_tokens_skipped
+            assert skipped > 0, (
+                "shared-prefix workload admitted without any prefix reuse")
+            print(f"check: prefix cache skipped {skipped} prefill tokens "
+                  f"across {server.prefix_hits} hits")
     return 0
 
 

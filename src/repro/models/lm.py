@@ -16,7 +16,6 @@ All stacks are scanned (homogeneous layer groups with stacked params) so the
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 
 import jax
@@ -29,13 +28,14 @@ from repro.models import xlstm as xl
 from repro.models.common import apply_dense, apply_norm, embed_init, \
     make_positions, norm_init
 from repro.models.transformer import (
-    AttnArgs, attn_apply, attn_init, block_apply, block_init,
-    init_kv_cache, reset_kv_slot, stack_init,
+    AttnArgs, block_apply, block_init,
+    init_kv_cache, install_kv_pages, reset_kv_slot, stack_init,
 )
 
 __all__ = [
     "init_params", "loss_fn", "prefill", "prefill_into", "decode_step",
-    "init_caches", "reset_slot", "input_specs", "count_params", "attn_args",
+    "init_caches", "reset_slot", "install_pages", "input_specs",
+    "count_params", "attn_args",
 ]
 
 
@@ -384,19 +384,48 @@ def _loss_chunked(params, batch, cfg: ArchConfig, *, impl, ce_chunk):
 
 
 # ================================================================= serve ==
+def _paged_args(cfg: ArchConfig, batch: int, max_len: int, paged: bool,
+                page_size: int, n_pages: int) -> dict:
+    """Resolve the ``init_kv_cache`` paging kwargs for a family that
+    supports paging (attention caches without a ring layout)."""
+    if not paged:
+        return {}
+    ps = page_size or cfg.kv_page_size or 8
+    n_slot_pages = -(-max_len // ps)
+    return {"page_size": ps,
+            "n_pages": n_pages or cfg.kv_pool_pages
+            or batch * n_slot_pages}
+
+
 def init_caches(cfg: ArchConfig, batch: int, max_len: int, *,
-                enc_len: int = 0, prefilled: int = 0):
+                enc_len: int = 0, prefilled: int = 0, paged: bool = False,
+                page_size: int = 0, n_pages: int = 0):
     """Cache pytree (layer-stacked) for decode.
 
     Position counters are **per slot**: every attention cache carries a
     ``(layers, batch)`` length vector, so each batch row holds its own
     sequence and can be admitted/retired independently (``prefilled`` seeds
-    every slot's counter)."""
+    every slot's counter).
+
+    ``paged=True`` builds attention caches in the **paged** layout
+    (per-layer page pool + per-slot page tables, see
+    ``transformer.init_kv_cache``): ``page_size`` tokens per page
+    (default ``cfg.kv_page_size`` or 8) and ``n_pages`` pool pages per
+    layer (default ``cfg.kv_pool_pages`` or exactly enough for ``batch``
+    dense-equivalent slots — give the pool headroom when a prefix tree
+    should retain pages past slot retirement).  The page table has one
+    entry per ``page_size`` positions up to ``max_len``; entry ``j`` of a
+    row covers that row's absolute positions ``[j * P, (j + 1) * P)``.
+    Recurrent families (hybrid/ssm) and ring (sliding-window) attention
+    caches opt out and ignore ``paged`` — their state is per-slot by
+    construction and is frozen via the ``seq_lens`` keep-mask path."""
     dt = _cdt(cfg)
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
         a = attn_args(cfg)
-        one = init_kv_cache(batch, max_len, a, dt, quant=cfg.kv_quant)
+        one = init_kv_cache(batch, max_len, a, dt, quant=cfg.kv_quant,
+                            **_paged_args(cfg, batch, max_len, paged,
+                                          page_size, n_pages))
         caches = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(
                 x, (cfg.n_layers,) + x.shape).copy(), one)
@@ -432,7 +461,9 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, *,
                 x, (n_groups,) + x.shape).copy(), group)
     if fam == "audio":
         a = attn_args(cfg)
-        one = init_kv_cache(batch, max_len, a, dt, quant=cfg.kv_quant)
+        one = init_kv_cache(batch, max_len, a, dt, quant=cfg.kv_quant,
+                            **_paged_args(cfg, batch, max_len, paged,
+                                          page_size, n_pages))
         self_c = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(
                 x, (cfg.encdec.n_dec_layers,) + x.shape).copy(), one)
@@ -461,16 +492,33 @@ def _keep_rows(new, old, keep, batch_axis):
 
 
 def decode_step(params, token, caches, cfg: ArchConfig, *, seq_lens=None):
-    """New tokens (B, S) against the caches -> (logits, new caches).
+    """New tokens ``token`` (B, S) int32 against the caches ->
+    ``(logits (B, S, V), new caches)``.
 
     ``S == 1`` is the classic decode step; ``S > 1`` runs chunked prefill
     through the cache plumbing (attention families; recurrent families are
-    single-token — use ``prefill_into`` for their prompt phase).  Every
-    batch row advances from its own cache position.
+    single-token — use ``prefill_into`` for their prompt phase).
+
+    Per-slot invariants (PR 2), both cache layouts:
+      * row b's token i lands at absolute position ``len[b] + i`` and
+        attends to row b's positions ``[0, len[b] + i]`` only — rows
+        never share or shift each other's positions;
+      * afterwards ``len[b] += seq_lens[b]`` (every layer agrees on the
+        per-slot length).
+
+    Page-table invariants (paged caches, see ``init_kv_cache``): writes
+    go through ``page_table[b, pos // P]`` and are dropped when aimed at
+    an unassigned (-1) entry, so a slot can only touch its own assigned
+    pages; positions ``< len[b]`` may live in pages shared with other
+    slots (prefix reuse) and those shared pages are full and immutable —
+    the host must have installed enough private tail pages to cover
+    ``len[b] + S`` before stepping.
 
     ``seq_lens`` (B,) int32: valid new tokens per row (0 freezes a row
     entirely — no KV writes, no recurrent-state update, no length advance),
-    enabling ragged prompts and idle slots in a serving batch.
+    enabling ragged prompts and idle slots in a serving batch.  Logits at
+    positions ``>= seq_lens[b]`` of row b are garbage and must be ignored
+    by the caller (``prefill_into`` gathers each row's last valid one).
     """
     fam = cfg.family
     x = _embed(params, token, cfg)
@@ -562,12 +610,21 @@ def decode_step(params, token, caches, cfg: ArchConfig, *, seq_lens=None):
 
 
 def reset_slot(caches, slot, cfg: ArchConfig):
-    """Zero slot ``slot``'s cache region across every layer/group so the
-    batch row can be reused for a new request with a fixed-size cache.
+    """Make slot ``slot``'s cache region logically empty across every
+    layer/group so the batch row can be reused for a new request with a
+    fixed-size cache.  ``slot`` may be a traced int32 (admission resets
+    run jitted).
 
-    ``slot`` may be a traced int32 (admission resets run jitted).  The
-    per-slot ``slot_pos`` map (set to -1) is what logically empties the
-    row; K/V and recurrent state are zeroed so no stale data survives."""
+    Dense attention caches: the per-slot ``slot_pos`` map (set to -1)
+    logically empties the row; K/V and recurrent state are zeroed so no
+    stale data survives.
+
+    Paged attention caches: only the slot's page-table row (-1) and
+    length (0) are cleared — the K/V pool pages may be shared with other
+    slots or retained by the prefix tree.  Returning them to the free
+    list (and decrementing prefix-tree refcounts) is the **host-side
+    server's** job at retirement (``PagePool.release``); a server that
+    resets paged slots without releasing their pages leaks the pool."""
     fam = cfg.family
 
     def attn_reset(c):
@@ -594,15 +651,51 @@ def reset_slot(caches, slot, cfg: ArchConfig):
     raise ValueError(fam)
 
 
+def install_pages(caches, slot, table_row, n_tokens, cfg: ArchConfig):
+    """Assign pool pages to slot ``slot`` of a paged cache pytree.
+
+    ``table_row`` is a ``(n_slot_pages,)`` int32 page-id vector (-1
+    padded) and ``n_tokens`` the number of already-valid shared-prefix
+    tokens it starts with; both may be traced (admission runs jitted).
+    Page ids are layer-uniform — every layer's pool has the same shape,
+    so one host-side allocation covers the whole stack and the same table
+    row is installed at every layer (exactly like ``len``).  See
+    ``transformer.install_kv_pages`` for the single-layer invariants."""
+    fam = cfg.family
+
+    def one(c):
+        return jax.vmap(install_kv_pages,
+                        in_axes=(0, None, None, None))(
+            c, slot, table_row, n_tokens)
+
+    if fam in ("dense", "moe", "vlm"):
+        return {"self": one(caches["self"])}
+    if fam == "audio":
+        return {"self": one(caches["self"]), "cross": caches["cross"]}
+    raise ValueError(
+        f"family {fam} has no paged attention cache to install into")
+
+
 def prefill_into(params, tokens, caches, cfg: ArchConfig, *, seq_lens=None):
-    """Teacher-forced prefill of ``tokens`` (B, P) into per-slot caches.
+    """Teacher-forced prefill of ``tokens`` (B, P) int32 into per-slot
+    caches.
 
     Returns ``(last_logits (B, V), new caches)`` where ``last_logits[b]``
     is the logits at each row's final *valid* position — the distribution
     over its first generated token.  ``seq_lens`` (B,) gives the true
-    prompt length per row (rows may be padded; rows with 0 are untouched).
+    prompt length per row (rows may be padded; rows with 0 are untouched
+    and contribute their position-0 garbage logits, which callers must
+    ignore).
 
-    Attention families run this as ONE cache-written forward over the full
+    Rows start from their **current** cache length, not from zero: row b's
+    tokens occupy absolute positions ``[len[b], len[b] + seq_lens[b])``.
+    With a paged cache whose slot was seeded by ``install_pages`` this is
+    what makes prefix-reuse admission a *tail* prefill — ``tokens[b]``
+    holds only the suffix after the shared prefix, positions line up
+    because ``len[b]`` was seeded with the shared token count, and the
+    shared pages are read (never written) through the page table.
+
+    Attention families run this as ONE cache-writing forward over the full
     prompt width; recurrent families (hybrid/ssm) scan the prompt token by
     token inside a single dispatch.
     """

@@ -12,7 +12,6 @@ Attention impls:
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 
 import jax
@@ -25,7 +24,7 @@ from repro.models.common import (
 
 __all__ = [
     "AttnArgs", "attn_init", "attn_apply", "init_kv_cache",
-    "reset_kv_slot",
+    "reset_kv_slot", "install_kv_pages",
     "ffn_init", "ffn_apply", "block_init", "block_apply",
     "stack_init", "stack_apply",
 ]
@@ -70,20 +69,77 @@ def attn_init(key, d_model: int, a: AttnArgs, *, qkv_bias=False,
 
 
 def init_kv_cache(batch: int, max_len: int, a: AttnArgs, dtype,
-                  *, ring: bool = False, quant: bool = False):
+                  *, ring: bool = False, quant: bool = False,
+                  page_size: int = 0, n_pages: int = 0):
     """Decode cache with **per-slot** position counters.
 
-    Every batch row ("slot") carries its own length counter and its own
-    absolute-position map, so rows can hold sequences of different lengths,
-    be prefixed/advanced independently, and be reset and reused without
-    touching their neighbours — the substrate for continuous batching.
+    Two layouts share one calling convention:
 
-    ``ring=True`` -> sliding-window ring buffer.
+    **Dense** (``page_size == 0``) — every slot owns a contiguous
+    ``max_len`` strip:
+
+      * ``k`` / ``v``      ``(batch, size, n_kv, hd)``
+      * ``slot_pos``       ``(batch, size)`` int32 — absolute position of
+        each entry, ``-1`` = empty (the mask that makes a row logically
+        empty without zeroing it)
+      * ``len``            ``(batch,)`` int32 — tokens cached so far
+
+    **Paged** (``page_size > 0``) — slots share a fixed pool of
+    ``page_size``-token pages and address them through a page table:
+
+      * ``k_pages`` / ``v_pages``  ``(n_pages, page_size, n_kv, hd)``
+      * ``page_table``  ``(batch, ceil(max_len / page_size))`` int32 —
+        entry ``j`` of row ``b`` is the pool page holding row ``b``'s
+        absolute positions ``[j * page_size, (j + 1) * page_size)``;
+        ``-1`` = unassigned
+      * ``len``         ``(batch,)`` int32
+
+    Paged invariants (what makes prefix sharing safe):
+
+      * positions ``< len[b]`` are contiguously valid — every one of them
+        lives in an assigned page and has been written (by this slot or by
+        the shared-prefix donor), so validity is pure arithmetic
+        (``pos < len``) and no per-entry position map is needed;
+      * a pool page referenced by more than one page table (a shared
+        prefix page) is **full and immutable**: writes only ever target
+        positions ``>= len[b]``, and admission only shares pages wholly
+        below the recipient's starting ``len``;
+      * page *allocation* is host-side (``repro.serving.PagePool`` owns
+        refcounts and the free list) — the device only ever reads/writes
+        through the table it was handed.
+
+    Every batch row ("slot") carries its own length counter, so rows can
+    hold sequences of different lengths, be prefilled/advanced
+    independently, and be reset and reused without touching their
+    neighbours — the substrate for continuous batching.
+
+    ``ring=True`` -> sliding-window ring buffer (dense only).
     ``quant=True`` -> int8 K/V with per-(token, head) f32 scales: halves
     the decode memory term (decode reads the whole cache every step)."""
+    kv_dtype = jnp.int8 if quant else dtype
+    if page_size:
+        if ring:
+            raise ValueError("paged KV cache does not support ring "
+                             "(sliding-window) layout")
+        n_slot_pages = -(-max_len // page_size)
+        if not n_pages:
+            n_pages = batch * n_slot_pages
+        cache = {
+            "k_pages": jnp.zeros((n_pages, page_size, a.n_kv, a.hd),
+                                 kv_dtype),
+            "v_pages": jnp.zeros((n_pages, page_size, a.n_kv, a.hd),
+                                 kv_dtype),
+            "page_table": jnp.full((batch, n_slot_pages), -1, jnp.int32),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+        if quant:
+            cache["k_scale_pages"] = jnp.zeros(
+                (n_pages, page_size, a.n_kv), jnp.float32)
+            cache["v_scale_pages"] = jnp.zeros(
+                (n_pages, page_size, a.n_kv), jnp.float32)
+        return cache
     size = min(max_len, a.sliding_window) if (ring and a.sliding_window) \
         else max_len
-    kv_dtype = jnp.int8 if quant else dtype
     cache = {
         "k": jnp.zeros((batch, size, a.n_kv, a.hd), kv_dtype),
         "v": jnp.zeros((batch, size, a.n_kv, a.hd), kv_dtype),
@@ -98,17 +154,48 @@ def init_kv_cache(batch: int, max_len: int, a: AttnArgs, dtype,
     return cache
 
 
-def reset_kv_slot(cache, slot):
-    """Zero one batch row of a decode cache so the slot is reusable.
+def _is_paged(cache) -> bool:
+    return "page_table" in cache
 
-    ``slot`` may be a traced int32 — admission resets run jitted.  The
-    position map is what makes the row logically empty (``slot_pos = -1``
-    masks every entry); K/V are zeroed too so a reset slot carries no stale
-    data.
+
+def reset_kv_slot(cache, slot):
+    """Make one batch row of a decode cache logically empty and reusable.
+
+    ``slot`` may be a traced int32 — admission resets run jitted.
+
+    Dense: the position map is what empties the row (``slot_pos = -1``
+    masks every entry); K/V are zeroed too so a reset slot carries no
+    stale data.
+
+    Paged: only the row's ``page_table`` (set to -1) and ``len`` (0) are
+    touched — the pool pages themselves may be shared with other slots or
+    retained by the prefix tree, so reclaiming them is the host-side
+    allocator's job (``PagePool.release``), never the device's.  Stale
+    data in a freed page is harmless: it is unreachable until the page is
+    re-installed in some table, and positions ``>= len`` never score.
     """
+    if _is_paged(cache):
+        return {**cache,
+                "page_table": cache["page_table"].at[slot].set(-1),
+                "len": cache["len"].at[slot].set(0)}
     out = {k: v.at[slot].set(0) for k, v in cache.items()}
     out["slot_pos"] = cache["slot_pos"].at[slot].set(-1)
     return out
+
+
+def install_kv_pages(cache, slot, table_row, n_tokens):
+    """Point slot ``slot`` of a paged cache at ``table_row`` pool pages and
+    seed its length with ``n_tokens`` already-valid (shared-prefix) tokens.
+
+    ``table_row`` is a ``(n_slot_pages,)`` int32 vector (``-1`` padded);
+    its first ``ceil(n_tokens / page_size)`` entries must be pages whose
+    first ``n_tokens`` positions hold valid K/V for this slot's token
+    prefix — admission guarantees that by only sharing full, immutable
+    prefix pages.  The remaining assigned entries are private, writable
+    pages covering the slot's tail prefill + generation."""
+    return {**cache,
+            "page_table": cache["page_table"].at[slot].set(table_row),
+            "len": cache["len"].at[slot].set(n_tokens)}
 
 
 def _kv_quantize(x):
@@ -253,15 +340,100 @@ def _xla_flash(q, k, v, scale, *, causal, window, q_chunk=512,
     return out[:, :s]
 
 
+def _paged_cache_update(cache, k_new, v_new, posq, token_valid, new_len,
+                        a: AttnArgs):
+    """Append ``k_new``/``v_new`` through the page table and build the
+    position-ordered attention view.
+
+    Write: token (b, i) at absolute position ``posq[b, i]`` lands in pool
+    page ``page_table[b, posq // P]`` at offset ``posq % P``.  Invalid
+    tokens (beyond ``seq_lens``, beyond the table, or aimed at an
+    unassigned ``-1`` entry) are redirected to page id ``n_pages`` and
+    dropped by the scatter — a slot can never write outside its own
+    assigned pages, which is what keeps shared (refcount > 1) pages
+    immutable.
+
+    Read: gathering the slot's table rebuilds a contiguous
+    ``(B, n_slot_pages * P, KV, hd)`` view in which view index == absolute
+    position, so validity is ``t <= posq`` (causal) and ``t < new_len``
+    (written); unassigned table entries gather page 0 but are masked by
+    the length test.
+
+    Returns ``(new_cache, k_read, v_read, valid)`` with f32 read views.
+    """
+    pool_k, pool_v = cache["k_pages"], cache["v_pages"]
+    n_pages, page, n_kv, hd = pool_k.shape
+    pt = cache["page_table"]                       # (B, NP)
+    b, np_ = pt.shape
+    page_idx = jnp.clip(posq // page, 0, np_ - 1)
+    pid = jnp.take_along_axis(pt, page_idx, axis=1)     # (B, S)
+    off = posq % page
+    keep = token_valid & (posq < np_ * page) & (pid >= 0)
+    # invalid writes aim at page `n_pages` and are dropped by the scatter
+    pid = jnp.where(keep, pid, n_pages)
+    quant = "k_scale_pages" in cache
+    if quant:
+        k_q, k_s = _kv_quantize(k_new)
+        v_q, v_s = _kv_quantize(v_new)
+        kc = pool_k.at[pid, off].set(k_q, mode="drop")
+        vc = pool_v.at[pid, off].set(v_q, mode="drop")
+        k_sc = cache["k_scale_pages"].at[pid, off].set(k_s, mode="drop")
+        v_sc = cache["v_scale_pages"].at[pid, off].set(v_s, mode="drop")
+        extra = {"k_scale_pages": k_sc, "v_scale_pages": v_sc}
+    else:
+        kc = pool_k.at[pid, off].set(cast(k_new, pool_k.dtype),
+                                     mode="drop")
+        vc = pool_v.at[pid, off].set(cast(v_new, pool_v.dtype),
+                                     mode="drop")
+        extra = {}
+    # gather view: (B, NP, P, KV, hd) -> (B, NP * P, KV, hd)
+    safe_pt = jnp.where(pt < 0, 0, pt)
+    k_view = jnp.take(kc, safe_pt, axis=0).reshape(b, np_ * page, n_kv, hd)
+    v_view = jnp.take(vc, safe_pt, axis=0).reshape(b, np_ * page, n_kv, hd)
+    if quant:
+        k_sv = jnp.take(k_sc, safe_pt, axis=0).reshape(b, np_ * page, n_kv)
+        v_sv = jnp.take(v_sc, safe_pt, axis=0).reshape(b, np_ * page, n_kv)
+        k_read = _kv_dequant(k_view, k_sv)
+        v_read = _kv_dequant(v_view, v_sv)
+    else:
+        k_read = k_view.astype(jnp.float32)
+        v_read = v_view.astype(jnp.float32)
+    t_pos = jnp.arange(np_ * page, dtype=jnp.int32)[None, None, :]
+    valid = (t_pos <= posq[:, :, None]) & (t_pos < new_len[:, None, None])
+    if a.sliding_window is not None:
+        valid &= posq[:, :, None] - t_pos < a.sliding_window
+    new_cache = {**cache, "k_pages": kc, "v_pages": vc, "len": new_len,
+                 **extra}
+    return new_cache, k_read, v_read, valid
+
+
 def attn_apply(p, x, a: AttnArgs, *, kv_x=None, positions=None, pos3=None,
                cache=None, compute_dtype=jnp.bfloat16, is_cross=False,
                seq_lens=None):
-    """Returns (y, new_cache).  Modes:
-      * cache is None     — full self/cross attention (train/prefill)
-      * cache is not None — cached step (x: (B, S, D)): S == 1 is the decode
-        step, S > 1 is chunked/batched prefill through the same cache
-        plumbing.  Each batch row advances from its **own** ``cache["len"]``
-        counter; rows never share positions.
+    """One attention layer, with or without a decode cache.
+
+    Shapes: ``x`` is ``(B, S, d_model)``; returns ``(y, new_cache)`` with
+    ``y`` ``(B, S, d_model)`` in ``compute_dtype``.
+
+    Modes:
+      * ``cache is None``     — full self/cross attention (train/prefill);
+        ``new_cache`` is returned as None.
+      * ``cache is not None`` — cached step: S == 1 is the decode step,
+        S > 1 is chunked/batched prefill through the same cache plumbing.
+        Each batch row advances from its **own** ``cache["len"]`` counter;
+        rows never share positions.  Token (b, i) is written at absolute
+        position ``len[b] + i`` and attends to row b's positions
+        ``[0, len[b] + i]`` (window-clipped when ``sliding_window`` is
+        set); afterwards ``len[b] += seq_lens[b]``.
+
+    The cache may be **dense** or **paged** (see ``init_kv_cache`` for the
+    layouts and their invariants) — the layout is detected from the cache
+    keys and the attention math is identical: a position-masked softmax
+    over a per-row contiguous view.  Dense scatters into the row's own
+    strip using the ``slot_pos`` map (ring-wrapped under a sliding
+    window); paged scatters through the page table and can therefore
+    start from a nonzero ``len`` whose K/V live in pages shared with
+    other rows (prefix reuse).
 
     ``seq_lens`` (B,) int32, cache mode only: number of *valid* new tokens
     per row (<= S).  Rows beyond their count write nothing, advance nothing,
@@ -321,8 +493,18 @@ def attn_apply(p, x, a: AttnArgs, *, kv_x=None, positions=None, pos3=None,
         k_new = apply_dense(p["k"], src)
         v_new = apply_dense(p["v"], src)
         k_new = _apply_rope(k_new, posq, pos3, a)
-        size = cache["k"].shape[1]
         new_len = cur + seq_lens
+        if _is_paged(cache):
+            new_cache, k_read, v_read, valid = _paged_cache_update(
+                cache, k_new, v_new, posq, token_valid, new_len, a)
+            sc = _gqa_scores(q.astype(jnp.float32), k_read) * scale
+            sc = jnp.where(valid[:, None, None, :, :], sc, NEG)
+            pr = jax.nn.softmax(sc, axis=-1)
+            y = _gqa_out(pr, v_read)
+            out = jnp.einsum("bshd,hde->bse", y,
+                             p["o"]["w"].astype(jnp.float32))
+            return out.astype(compute_dtype), new_cache
+        size = cache["k"].shape[1]
         if _is_ring(cache, a):
             if s > size:
                 # a wider chunk could retire in-window keys mid-chunk

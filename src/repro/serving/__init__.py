@@ -1,0 +1,21 @@
+"""Host-side serving infrastructure for the paged KV cache.
+
+The device side (``repro.models.transformer``) only ever reads and writes
+K/V through the page table it is handed; everything about *which* pages a
+slot gets — allocation, refcounting, prefix sharing, eviction — lives
+here, on the host, in plain Python:
+
+  * :class:`PagePool`   — refcounting allocator over a fixed page pool
+    (one pool id space shared by every layer's pool array);
+  * :class:`PrefixTree` — radix tree over full-page token runs mapping
+    prompt prefixes to page runs, with LRU leaf eviction.
+
+This mirrors the paper's loose-control / tight-data split: control
+decisions (admission, sharing, eviction) are cheap host-side bookkeeping,
+while the data plane stays a fixed set of device arrays addressed through
+small int32 tables.
+"""
+from repro.serving.pages import PagePool
+from repro.serving.prefix_tree import PrefixTree
+
+__all__ = ["PagePool", "PrefixTree"]

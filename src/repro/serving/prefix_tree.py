@@ -1,0 +1,135 @@
+"""Radix tree mapping token-prefix runs to KV pool pages.
+
+Nodes live at **page granularity**: each edge is keyed by the byte string
+of one full page's tokens (``page_size`` int32 values), and the node at
+the end of a root-to-node path caches the pool page holding the K/V for
+exactly that token run.  Matching a prompt therefore walks full pages
+greedily from the root; partial pages are never shared (the page holding
+a prompt's tail also receives that request's *generated* tokens, so its
+content is not final at insertion time).
+
+Ownership: the tree holds one ``PagePool`` reference per node, taken at
+insertion and dropped at eviction.  Because active slots hold their own
+references, ``refs[page] == 1`` identifies a page retained *only* by the
+tree — the only kind eviction may reclaim.
+
+Eviction is LRU over leaves: repeatedly remove the least-recently-touched
+leaf whose page is tree-only, which peels unreferenced subtrees from the
+bottom up (an interior node becomes a leaf once its children are gone)
+while never touching a node on any active request's path — those pages
+have refcount >= 2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.pages import PagePool
+
+__all__ = ["PrefixTree"]
+
+
+class _Node:
+    __slots__ = ("children", "parent", "key", "page", "last_access")
+
+    def __init__(self, parent=None, key=None, page=-1):
+        self.children: dict[bytes, _Node] = {}
+        self.parent = parent
+        self.key = key
+        self.page = page
+        self.last_access = 0
+
+
+class PrefixTree:
+    """Prefix cache over full-page token runs, backed by ``pool``."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.root = _Node()
+        self._clock = 0          # logical LRU clock (bumped per operation)
+        self.nodes = 0
+
+    def _key(self, tokens) -> bytes:
+        return np.ascontiguousarray(tokens, np.int32).tobytes()
+
+    # ------------------------------------------------------------- match
+    def match(self, prompt) -> tuple[list[int], int]:
+        """Longest cached prefix of ``prompt`` -> (pages, n_tokens).
+
+        Walks full pages greedily; every returned page gets one pool
+        reference **retained on behalf of the caller** (install them in a
+        slot's page table and release them at retirement).  The walk is
+        capped at ``len(prompt) - 1`` tokens: the final prompt token is
+        always left for the tail prefill, because admission needs its
+        logits to sample the first generated token."""
+        p = self.pool.page_size
+        n_pages_max = (len(prompt) - 1) // p
+        self._clock += 1
+        node, pages = self.root, []
+        for j in range(n_pages_max):
+            child = node.children.get(self._key(prompt[j * p:(j + 1) * p]))
+            if child is None:
+                break
+            child.last_access = self._clock
+            pages.append(child.page)
+            node = child
+        self.pool.retain(pages)
+        return pages, len(pages) * p
+
+    # ------------------------------------------------------------ insert
+    def insert(self, prompt, slot_pages) -> int:
+        """Cache ``prompt``'s full pages, reusing ``slot_pages`` (the
+        slot's page-table run, shared prefix first) as their storage.
+
+        Only pages wholly covered by the prompt are inserted — page ``j``
+        holds positions ``[j*P, (j+1)*P)``, all of which must be prompt
+        tokens for the page to be immutable from now on.  New nodes take
+        one pool reference on their page; runs already cached keep their
+        existing (deduplicated) page even if ``slot_pages`` brought a
+        private copy of the same tokens.  Returns nodes created."""
+        p = self.pool.page_size
+        created = 0
+        self._clock += 1
+        node = self.root
+        for j in range(len(prompt) // p):
+            key = self._key(prompt[j * p:(j + 1) * p])
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(parent=node, key=key, page=slot_pages[j])
+                node.children[key] = child
+                self.pool.retain([child.page])
+                self.nodes += 1
+                created += 1
+            child.last_access = self._clock
+            node = child
+        return created
+
+    # ----------------------------------------------------------- evict
+    def _leaves(self):
+        stack = list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            if nd.children:
+                stack.extend(nd.children.values())
+            else:
+                yield nd
+
+    def evict(self, n: int) -> int:
+        """Free up to ``n`` pool pages by dropping LRU tree-only leaves.
+
+        A leaf is evictable iff ``pool.refs[leaf.page] == 1`` — the tree
+        holds the only reference.  Pages shared with any active slot are
+        never reclaimed.  Removing a leaf can expose its parent as the
+        next candidate, so whole unreferenced subtrees drain bottom-up.
+        Returns the number of pages actually freed."""
+        freed = 0
+        while freed < n:
+            victims = [nd for nd in self._leaves()
+                       if self.pool.refs[nd.page] == 1]
+            if not victims:
+                break
+            victim = min(victims, key=lambda nd: nd.last_access)
+            del victim.parent.children[victim.key]
+            self.pool.release([victim.page])
+            self.nodes -= 1
+            freed += 1
+        return freed

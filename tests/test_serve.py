@@ -1,9 +1,12 @@
-"""Continuous-batching serving tests: per-slot KV-cache positions.
+"""Continuous-batching serving tests: paged KV with prefix-tree reuse.
 
 The acceptance bar for the serving path is *bit-equivalence*: whatever mix
 of staggered admissions, ragged prompt lengths, idle slots, microbatch
-shards, and slot reuse the server sees, every request's greedy tokens must
-equal its single-request reference decode exactly.
+shards, slot reuse, prefix sharing, and pool eviction the server sees,
+every request's greedy tokens must equal its single-request reference
+decode exactly.  ``solo_reference`` runs on the DENSE cache layout while
+``Server`` defaults to the paged one, so every assertion here is a
+cross-layout oracle.
 """
 import jax
 import jax.numpy as jnp
@@ -143,6 +146,94 @@ def test_ring_cache_rejects_over_wide_chunk():
     x = jnp.zeros((1, 6, 16), jnp.float32)
     with pytest.raises(ValueError, match="ring cache"):
         attn_apply(params, x, a, cache=cache)
+
+
+def test_prefix_reuse_bit_identical_prefills_tail_only(smollm):
+    """Two requests sharing a long prefix: the second must decode
+    bit-identically to its solo reference while its prefill covers only
+    the unshared tail (observable via per-request/server stats)."""
+    cfg, params = smollm
+    gen, P = 6, 4
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    pa = np.concatenate([shared, rng.integers(0, cfg.vocab_size, 3)
+                         .astype(np.int32)])          # 12 tokens
+    pb = np.concatenate([shared, rng.integers(0, cfg.vocab_size, 2)
+                         .astype(np.int32)])          # 11 tokens
+    max_len = len(pa) + gen + 2
+    server = Server(cfg, params, batch=2, max_len=max_len, page_size=P)
+    done = _drain(server, [Request(0, pa, gen),
+                           Request(1, pb, gen, arrival=2)])
+    by = {r.rid: r for r in done}
+    for r in done:
+        ref = solo_reference(cfg, params, r.prompt, gen, max_len)
+        assert r.out == ref, (r.rid, r.out, ref)
+    # request 0 primed the tree; request 1 shares floor(9 / 4) = 2 full
+    # pages (8 tokens) and prefills only its 3-token tail
+    assert by[0].shared_len == 0 and by[0].prefill_len == len(pa)
+    assert by[1].shared_len == 8
+    assert by[1].prefill_len == len(pb) - 8
+    st = server.stats()
+    assert st["prefix_hits"] == 1 and st["prefill_tokens_skipped"] == 8
+    assert st["prefill_tokens"] == len(pa) + len(pb) - 8
+
+
+def test_pool_exhaustion_defers_and_never_reclaims_referenced_pages(smollm):
+    """Fill the page pool with an active request: the follower's admission
+    must be deferred (its pages are pinned — refcounted pages are never
+    evicted) and succeed only after retirement, still bit-identically."""
+    cfg, params = smollm
+    gen, P = 6, 4
+    max_len = 12                      # 3 pages per slot worst-case
+    pa, pb = _prompts(cfg, [6, 6], seed=13)
+    # pool of 4: request A takes 3 pages (1 of them also retained by the
+    # tree after insert), leaving 1 free — B needs 3 and must wait
+    server = Server(cfg, params, batch=2, max_len=max_len, page_size=P,
+                    pool_pages=4)
+    done = _drain(server, [Request(0, pa, gen), Request(1, pb, gen)])
+    assert server.deferred_admissions > 0
+    for r in done:
+        ref = solo_reference(cfg, params, r.prompt, gen, max_len)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_slot_churn_releases_pages(smollm):
+    """Many short requests through few slots: retirement must release
+    page references (the reset_slot page-leak fix) — afterwards the only
+    pages still in use are the prefix tree's, and the pool never ran
+    dry mid-run."""
+    cfg, params = smollm
+    gen, P, n_req = 3, 4, 12
+    max_len = 10
+    server = Server(cfg, params, batch=2, max_len=max_len, page_size=P)
+    pending = [Request(i, p, gen)
+               for i, p in enumerate(_prompts(cfg, [5] * n_req, seed=17))]
+    done = _drain(server, pending)
+    assert len(done) == n_req
+    assert server.deferred_admissions == 0     # churn never starved
+    # all slot references are gone; only tree-retained pages remain
+    assert all(p is None for p in server.slot_pages)
+    assert server.pages_in_use == sum(t.nodes for t in server.trees)
+    for pool in server.pools:
+        assert (pool.refs[pool.refs > 0] == 1).all()
+    for r in done:
+        ref = solo_reference(cfg, params, r.prompt, gen, max_len)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_dense_fallback_still_serves(smollm):
+    """paged=False keeps the PR 2 dense path alive (and bit-identical)."""
+    cfg, params = smollm
+    gen = 5
+    max_len = 6 + gen + 1
+    server = Server(cfg, params, batch=2, max_len=max_len, paged=False)
+    pending = [Request(i, p, gen)
+               for i, p in enumerate(_prompts(cfg, [6, 4, 5], seed=23))]
+    done = _drain(server, pending)
+    assert not server.stats()["paged"]
+    for r in done:
+        ref = solo_reference(cfg, params, r.prompt, gen, max_len)
+        assert r.out == ref, (r.rid, r.out, ref)
 
 
 def test_prefill_into_matches_forward_last_logits(smollm):
