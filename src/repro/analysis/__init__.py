@@ -1,0 +1,42 @@
+"""Static verification of the compiler pipeline and serving control plane.
+
+The SNAX pitch is that system-management tasks are *automated and
+verified* rather than hand-written and silently wrong; this package is
+the "verified" half for our lowered artifacts.  Four checkers over the
+four things that can silently corrupt a run:
+
+  * :mod:`repro.analysis.hazards`  — RAW/WAR/WAW races across the
+    pipelined schedule, donation aliasing, rotation depth;
+  * :mod:`repro.analysis.memplan`  — SPM buffer overlap, bounds,
+    resident/rotating discipline, high-water consistency;
+  * :mod:`repro.analysis.streams`  — streamer/port legality per
+    accelerator (port starvation, element widths, FIFO footprints);
+  * :mod:`repro.analysis.serving`  — abstract interpretation of
+    ``PagePool``/``PrefixTree`` traces (refcount leaks, double release,
+    eviction of referenced pages).
+
+Entry points: ``analyze_pipeline`` (used by ``emit(verify=True)``),
+``verify_pool`` (used by ``Server(verify=True)``), ``analyze_config``
+(the per-arch sweep), and the ``python -m repro.analysis`` CLI.
+"""
+from repro.analysis.configcheck import (
+    analyze_config, check_config, exercise_serving,
+)
+from repro.analysis.diagnostics import (
+    AnalysisError, Diagnostic, Report, Severity,
+)
+from repro.analysis.hazards import check_schedule
+from repro.analysis.memplan import check_allocation
+from repro.analysis.passes import (
+    PipelineArtifacts, analyze_pipeline, register_pass,
+)
+from repro.analysis.serving import check_serving_trace, verify_pool
+from repro.analysis.streams import check_streamers
+
+__all__ = [
+    "AnalysisError", "Diagnostic", "Report", "Severity",
+    "PipelineArtifacts", "analyze_pipeline", "register_pass",
+    "check_schedule", "check_allocation", "check_streamers",
+    "check_serving_trace", "verify_pool",
+    "analyze_config", "check_config", "exercise_serving",
+]

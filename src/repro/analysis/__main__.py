@@ -1,0 +1,122 @@
+"""CLI: sweep the static analyzer over presets and model configs.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis --all-presets
+  PYTHONPATH=src python -m repro.analysis --configs
+  PYTHONPATH=src python -m repro.analysis --arch smollm_135m --json
+  PYTHONPATH=src python -m repro.analysis            # both sweeps
+
+Exit status is 1 iff any error-severity diagnostic fired — the CI
+``analyze`` job gates on exactly this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.configcheck import analyze_config
+from repro.analysis.diagnostics import Report
+from repro.analysis.passes import analyze_pipeline
+
+__all__ = ["main"]
+
+
+def preset_reports() -> list[Report]:
+    """Analyze every preset cluster x schedule-mode x staging variant of
+    the Fig. 6 TinyML workload — the full artifact matrix the compiler
+    can produce today."""
+    from repro.core.placement import place
+    from repro.core.presets import (
+        cluster_6b, cluster_6c, cluster_6d, tinyml_graph,
+    )
+
+    reports: list[Report] = []
+    graph = tinyml_graph()
+    for cname, make in (("cluster_6b", cluster_6b),
+                        ("cluster_6c", cluster_6c),
+                        ("cluster_6d", cluster_6d)):
+        cluster = make()
+        placement = place(graph, cluster)
+        for mode in ("pipelined", "sequential"):
+            for ws in (False, True):
+                subject = (f"{cname} x {graph.name} x {mode}"
+                           f"{' x weight-streaming' if ws else ''}")
+                reports.append(analyze_pipeline(
+                    graph, placement, cluster, n_tiles=8,
+                    streamed=("x",), mode=mode, weight_streaming=ws,
+                    subject=subject))
+    return reports
+
+
+def config_reports(arch: str | None = None) -> list[Report]:
+    import repro.configs as configs
+
+    ids = [arch] if arch else list(configs.ARCH_IDS)
+    reports: list[Report] = []
+    for arch_id in ids:
+        try:
+            cfg = configs.get(arch_id)
+        except ModuleNotFoundError:
+            r = Report(subject=f"config {arch_id}")
+            from repro.analysis.diagnostics import Diagnostic, Severity
+            r.extend([Diagnostic(
+                "CFG000", Severity.ERROR,
+                f"unknown arch id {arch_id!r}", {"arch": arch_id},
+                "config")])
+            reports.append(r)
+            continue
+        reports.append(analyze_config(cfg, arch_id))
+    return reports
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically verify schedules, memory plans, "
+                    "streamer configs, and the serving control plane")
+    ap.add_argument("--all-presets", action="store_true",
+                    help="sweep cluster_6b/6c/6d x pipelined/sequential "
+                         "x weight-streaming over the Fig. 6 workload")
+    ap.add_argument("--configs", action="store_true",
+                    help="sweep every registered ArchConfig (shape "
+                         "sanity + traced serving-control-plane "
+                         "exercise for paged families)")
+    ap.add_argument("--arch", default=None,
+                    help="analyze one arch id instead of the full sweep")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the JSON diagnostic document on stdout")
+    ap.add_argument("--verbose", action="store_true",
+                    help="include info-severity diagnostics in the "
+                         "human rendering")
+    args = ap.parse_args(argv)
+
+    reports: list[Report] = []
+    if args.arch:
+        reports += config_reports(args.arch)
+    else:
+        sweep_all = not (args.all_presets or args.configs)
+        if args.all_presets or sweep_all:
+            reports += preset_reports()
+        if args.configs or sweep_all:
+            reports += config_reports()
+
+    n_err = sum(len(r.errors) for r in reports)
+    n_warn = sum(len(r.warnings) for r in reports)
+    if args.json:
+        print(json.dumps({
+            "ok": n_err == 0,
+            "n_errors": n_err,
+            "n_warnings": n_warn,
+            "reports": [r.to_dict() for r in reports],
+        }, indent=1))
+    else:
+        for r in reports:
+            print(r.render(verbose=args.verbose))
+        print(f"analysis: {len(reports)} subject(s), {n_err} error(s), "
+              f"{n_warn} warning(s)")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,133 @@
+"""Config sweep: static sanity of ``ArchConfig``s plus a synthetic
+control-plane exercise of each paged-serving configuration.
+
+The LM configs never go through the SNAX lowering passes, but they do
+parameterize the serving control plane (page size, pool capacity) and
+the model shapes every launcher trusts.  Two layers of checking:
+
+  * **CFG rules** — shape arithmetic that would otherwise explode deep
+    inside a jit: head divisibility, GQA grouping, MoE routing bounds,
+    family/sub-config coherence, paged-KV knob sanity;
+  * **serving exercise** — build a real ``PagePool``/``PrefixTree`` with
+    the config's page parameters, drive a deterministic shared-prefix
+    admission/retire/evict workload through them with trace recording
+    on, and run the serving-invariant checker over the trace.  This is
+    the cheapest possible end-to-end proof that the config's paged
+    parameters produce a leak-free control plane — no model, no JAX.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.serving.pages import PagePool
+from repro.serving.prefix_tree import PrefixTree
+
+from repro.analysis.diagnostics import Diagnostic, Report, Severity
+from repro.analysis.serving import verify_pool
+
+__all__ = ["check_config", "exercise_serving", "analyze_config"]
+
+PASS = "config"
+
+# families whose serving cache supports the paged layout — keep in sync
+# with repro.launch.serve._PAGED_FAMILIES
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _err(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.ERROR, msg, dict(anchor), PASS)
+
+
+def _warn(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.WARNING, msg, dict(anchor), PASS)
+
+
+def check_config(cfg: ArchConfig) -> list[Diagnostic]:
+    diags: list[Diagnostic] = []
+    a = {"arch": cfg.name}
+    if cfg.head_dim is None and cfg.d_model % cfg.n_heads:
+        diags.append(_err(
+            "CFG001",
+            f"d_model {cfg.d_model} not divisible by n_heads "
+            f"{cfg.n_heads} and no explicit head_dim", **a))
+    if cfg.n_kv_heads <= 0 or cfg.n_heads % cfg.n_kv_heads:
+        diags.append(_err(
+            "CFG002",
+            f"n_heads {cfg.n_heads} not an integer multiple of "
+            f"n_kv_heads {cfg.n_kv_heads} — GQA grouping is ragged",
+            **a))
+    if cfg.moe is not None and cfg.moe.top_k > cfg.moe.n_routed:
+        diags.append(_err(
+            "CFG003",
+            f"moe.top_k {cfg.moe.top_k} > n_routed {cfg.moe.n_routed}",
+            **a))
+    if cfg.family == "moe" and cfg.moe is None:
+        diags.append(_err(
+            "CFG004", "family 'moe' without a MoeCfg", **a))
+    if cfg.family == "hybrid" and (
+            cfg.ssm is None or not cfg.ssm.shared_attn_every):
+        diags.append(_err(
+            "CFG004",
+            "family 'hybrid' needs ssm.shared_attn_every > 0", **a))
+    if cfg.family == "audio" and cfg.encdec is None:
+        diags.append(_err(
+            "CFG004", "family 'audio' without an EncDecCfg", **a))
+    if cfg.kv_page_size < 0 or cfg.kv_pool_pages < 0:
+        diags.append(_err(
+            "CFG005",
+            f"negative paged-KV knobs (page_size={cfg.kv_page_size}, "
+            f"pool_pages={cfg.kv_pool_pages})", **a))
+    if cfg.kv_pool_pages and not cfg.kv_page_size:
+        diags.append(_warn(
+            "CFG005",
+            "kv_pool_pages set without kv_page_size — the pool will be "
+            "sized in default-sized pages", **a))
+    return diags
+
+
+def exercise_serving(cfg: ArchConfig, *, n_pages: int = 32,
+                     n_requests: int = 6) -> list[Diagnostic]:
+    """Drive a deterministic shared-prefix workload through a traced
+    pool/tree built from ``cfg``'s paged parameters, then verify it.
+
+    Mirrors the Server admission flow: match -> alloc tail -> install ->
+    insert -> (decode) -> release at retirement, with one eviction wave
+    once the pool tightens.  Every request retires, so the end state the
+    checker expects is "tree references only".
+    """
+    page_size = cfg.kv_page_size or 8
+    n_pages = max(n_pages, cfg.kv_pool_pages or 0)
+    pool = PagePool(n_pages, page_size, record=True)
+    tree = PrefixTree(pool)
+    shared = np.arange(2 * page_size, dtype=np.int32)   # 2 shared pages
+    for rid in range(n_requests):
+        tail = 1000 * (rid + 1) + np.arange(
+            page_size + 1, dtype=np.int32)
+        prompt = np.concatenate([shared, tail])
+        need = -(-(len(prompt) + page_size) // page_size)
+        matched, matched_len = tree.match(prompt)
+        n_priv = need - len(matched)
+        if pool.free_pages < n_priv:
+            tree.evict(n_priv - pool.free_pages)
+        priv = pool.alloc(n_priv)
+        if priv is None:                     # pool pinned: defer
+            pool.release(matched)
+            continue
+        table = matched + priv
+        tree.insert(prompt, table)
+        pool.release(table)                  # retire immediately
+    tree.evict(n_pages)                      # drain every tree-only page
+    return verify_pool(pool, tree, live_slot_pages=[])
+
+
+def analyze_config(cfg: ArchConfig | None, arch_id: str) -> Report:
+    """Full per-arch report: CFG rules + (paged families) the serving
+    exercise.  ``cfg`` may be None for non-LM entries (snax_tinyml)."""
+    out = Report(subject=f"config {arch_id}")
+    if cfg is None:
+        return out
+    out.extend(check_config(cfg), passname=PASS)
+    if cfg.family in PAGED_FAMILIES:
+        out.extend(exercise_serving(cfg), passname="serving")
+    return out

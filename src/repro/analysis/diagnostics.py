@@ -1,0 +1,136 @@
+"""Structured diagnostics for the static-analysis pass framework.
+
+Every checker emits :class:`Diagnostic` records — a severity, a stable
+rule id (``HZD001``, ``MEM002``, ...), a human message, and an *anchor*
+naming the offending artifact (graph node, SPM buffer, pipeline stage,
+pool page).  A :class:`Report` aggregates them across passes and renders
+either a human summary or a JSON document (the schema documented in
+``docs/analysis.md``), so the CLI, the ``emit(verify=True)`` pre-flight,
+and the CI gate all consume the same structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+from typing import Any, Iterable
+
+
+__all__ = ["Severity", "Diagnostic", "Report", "AnalysisError"]
+
+
+class Severity(enum.IntEnum):
+    """Ordered so ``max(severities)`` is the report's worst finding."""
+
+    INFO = 0
+    WARNING = 1
+    ERROR = 2
+
+    def __str__(self) -> str:  # "error", not "Severity.ERROR"
+        return self.name.lower()
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding, anchored to the artifact it is about.
+
+    ``anchor`` keys are drawn from a small vocabulary per pass:
+    ``node`` / ``stage`` / ``value`` (hazards), ``buffer`` (memory plan),
+    ``accelerator`` / ``port`` (streamers), ``page`` / ``op`` (serving),
+    ``arch`` (config sweep).
+    """
+
+    rule: str                       # stable id, e.g. "MEM001"
+    severity: Severity
+    message: str
+    anchor: dict[str, Any] = dataclasses.field(default_factory=dict)
+    passname: str = ""              # which checker produced it
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "rule": self.rule,
+            "severity": str(self.severity),
+            "message": self.message,
+            "anchor": dict(self.anchor),
+            "pass": self.passname,
+        }
+
+    def render(self) -> str:
+        loc = " ".join(f"{k}={v}" for k, v in self.anchor.items())
+        where = f" [{loc}]" if loc else ""
+        return f"{self.severity:>7}: {self.rule}{where}: {self.message}"
+
+    def __format__(self, spec: str) -> str:
+        return format(self.render(), spec)
+
+
+class AnalysisError(RuntimeError):
+    """Raised by ``Report.raise_on_error()`` — carries the full report."""
+
+    def __init__(self, report: "Report"):
+        self.report = report
+        errs = report.errors
+        lines = "\n".join(d.render() for d in errs)
+        super().__init__(
+            f"static analysis found {len(errs)} error(s):\n{lines}")
+
+
+@dataclasses.dataclass
+class Report:
+    """Aggregated diagnostics from one analysis run."""
+
+    diagnostics: list[Diagnostic] = dataclasses.field(default_factory=list)
+    subject: str = ""               # what was analyzed ("cluster_6c x ...")
+
+    def extend(self, diags: Iterable[Diagnostic],
+               passname: str = "") -> None:
+        for d in diags:
+            if passname and not d.passname:
+                d = dataclasses.replace(d, passname=passname)
+            self.diagnostics.append(d)
+
+    def merge(self, other: "Report") -> None:
+        self.diagnostics.extend(other.diagnostics)
+
+    # ----------------------------------------------------------- queries
+    @property
+    def errors(self) -> list[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity >= Severity.ERROR]
+
+    @property
+    def warnings(self) -> list[Diagnostic]:
+        return [d for d in self.diagnostics
+                if d.severity == Severity.WARNING]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def by_rule(self, rule: str) -> list[Diagnostic]:
+        return [d for d in self.diagnostics if d.rule == rule]
+
+    def raise_on_error(self) -> "Report":
+        if not self.ok:
+            raise AnalysisError(self)
+        return self
+
+    # --------------------------------------------------------- rendering
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "subject": self.subject,
+            "ok": self.ok,
+            "n_errors": len(self.errors),
+            "n_warnings": len(self.warnings),
+            "diagnostics": [d.to_dict() for d in self.diagnostics],
+        }
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    def render(self, *, verbose: bool = False) -> str:
+        head = (f"{self.subject or 'analysis'}: "
+                f"{len(self.errors)} error(s), "
+                f"{len(self.warnings)} warning(s)")
+        shown = [d for d in self.diagnostics
+                 if verbose or d.severity >= Severity.WARNING]
+        return "\n".join([head] + ["  " + d.render() for d in shown])

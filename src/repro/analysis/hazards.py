@@ -1,0 +1,192 @@
+"""Checker 1 — hazard/race detection over the pipelined schedule.
+
+Models per-tile buffer accesses across the ``ScheduleReport`` stage list
+and the executor's donation + double-buffer rotation
+(``repro.runtime.executor``) and proves, statically:
+
+  * **RAW coverage** (HZD001/HZD002): at tick ``t`` stage ``s`` touches
+    tile ``t - s``, and the only synchronization is the per-tick barrier
+    — so a stage may only read values defined by an *earlier* stage
+    (tile ``t``'s value exists by the time the consumer's tick arrives).
+    A stage reading a value defined later (or never) in the list is a
+    read of garbage at runtime.
+  * **Donation aliasing** (HZD010-HZD013): re-derives the executor's
+    ``donate_argnums`` decision (``core.schedule.donation_argnums``) and
+    checks each donation against independently computed liveness — a
+    donated operand with another reader is a WAR race (XLA writes the
+    stage output into a buffer another stage still reads), a donated
+    resident weight is a WAW across tiles (tile ``t+1`` reuses the
+    weight tile ``t`` just clobbered), donating a graph output destroys
+    the result, and a shape/dtype mismatch aliases buffers of different
+    extent.
+  * **Rotation depth** (HZD020): with odd/even double buffering a tile's
+    buffer is recycled ``copies`` tiles later; a value whose
+    producer-to-consumer stage distance reaches ``copies`` is read in
+    the same tick its bank is being overwritten by a younger tile.
+"""
+from __future__ import annotations
+
+from repro.core.allocation import AllocationPlan
+from repro.core.graph import Graph
+from repro.core.schedule import (
+    ScheduleReport, donation_argnums, stage_consumers,
+)
+
+from repro.analysis.diagnostics import Diagnostic, Severity
+
+__all__ = ["check_schedule"]
+
+PASS = "hazards"
+
+
+def _err(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.ERROR, msg, dict(anchor), PASS)
+
+
+def _warn(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.WARNING, msg, dict(anchor), PASS)
+
+
+def check_schedule(
+    graph: Graph,
+    report: ScheduleReport,
+    *,
+    plan: AllocationPlan | None = None,
+    donations: dict[str, tuple[int, ...]] | None = None,
+) -> list[Diagnostic]:
+    """Verify RAW/WAR/WAW safety of ``report``'s stage list.
+
+    ``donations`` maps stage name -> donated argument indices; when None
+    it is derived exactly the way ``AsyncExecutor`` derives it, so the
+    default run verifies what will actually execute.  Passing an explicit
+    map lets tests (and future hand-tuned schedules) verify alternative
+    aliasing decisions.
+    """
+    diags: list[Diagnostic] = []
+    stages = report.stages
+
+    # where is each value defined? graph inputs at -1 (host, before the
+    # pipeline), dma_in-streamed slices at the dma_in stage, node outputs
+    # at their compute stage.
+    defined_at: dict[str, int] = {v: -1 for v in graph.inputs}
+    for idx, st in enumerate(stages):
+        if st.stage == "dma_in":
+            for v in st.inputs:          # dma_in *produces* tile slices
+                defined_at[v] = idx
+        elif st.output is not None:
+            if st.output in defined_at and defined_at[st.output] >= 0:
+                diags.append(_err(
+                    "HZD003",
+                    f"value {st.output!r} defined by two stages "
+                    f"(WAW: both write the same SPM buffer)",
+                    stage=st.stage, value=st.output))
+            defined_at[st.output] = idx
+
+    consumers = stage_consumers(stages)
+    # last stage index that reads each value (for donation liveness)
+    last_read: dict[str, int] = {}
+    for idx, st in enumerate(stages):
+        if st.stage == "dma_in":
+            continue
+        for v in st.inputs:
+            last_read[v] = idx
+
+    # ---- RAW: every read must be defined by an earlier pipeline step
+    for idx, st in enumerate(stages):
+        if st.stage == "dma_in":
+            continue
+        for v in st.inputs:
+            if v not in defined_at:
+                diags.append(_err(
+                    "HZD001",
+                    f"stage {st.stage!r} reads {v!r}, which no stage or "
+                    f"graph input defines",
+                    stage=st.stage, value=v))
+            elif defined_at[v] >= idx:
+                producer = stages[defined_at[v]].stage
+                diags.append(_err(
+                    "HZD002",
+                    f"RAW edge {producer!r} -> {st.stage!r} on {v!r} is "
+                    f"not covered by a dependency barrier: the producer "
+                    f"runs at or after the consumer's tick, so tile t is "
+                    f"read before it is written",
+                    stage=st.stage, value=v, producer=producer))
+            if v in st.tiled_inputs and defined_at.get(v, -1) < 0:
+                diags.append(_err(
+                    "HZD004",
+                    f"stage {st.stage!r} treats {v!r} as tiled but no "
+                    f"pipeline stage produces per-tile slices of it "
+                    f"(every tile would read the same untiled buffer)",
+                    stage=st.stage, value=v))
+
+    # ---- donation aliasing (WAR/WAW introduced by donate_argnums)
+    for idx, st in enumerate(stages):
+        if st.fn is None and donations is None:
+            continue                      # DMA stages never donate
+        if donations is not None:
+            donate = donations.get(st.stage, ())
+        else:
+            donate = donation_argnums(st, graph, consumers)
+        for argidx in donate:
+            if argidx >= len(st.inputs):
+                diags.append(_err(
+                    "HZD010",
+                    f"stage {st.stage!r} donates argument {argidx} but "
+                    f"only has {len(st.inputs)} operands",
+                    stage=st.stage, arg=argidx))
+                continue
+            v = st.inputs[argidx]
+            if consumers.get(v, 0) > 1 or last_read.get(v, idx) > idx:
+                diags.append(_err(
+                    "HZD011",
+                    f"stage {st.stage!r} donates {v!r} which "
+                    f"{consumers.get(v, 0)} stages read (last at stage "
+                    f"{stages[last_read[v]].stage!r}): donation writes "
+                    f"the output into a buffer a later stage still "
+                    f"reads (WAR race)",
+                    stage=st.stage, value=v))
+            if v in graph.outputs:
+                diags.append(_err(
+                    "HZD012",
+                    f"stage {st.stage!r} donates graph output {v!r}: "
+                    f"the result buffer would be clobbered before "
+                    f"DMA-out",
+                    stage=st.stage, value=v))
+            if v not in st.tiled_inputs:
+                diags.append(_err(
+                    "HZD013",
+                    f"stage {st.stage!r} donates resident operand {v!r}: "
+                    f"tile t's in-place write corrupts the weights tile "
+                    f"t+1 reuses (WAW across tiles)",
+                    stage=st.stage, value=v))
+            elif st.out_spec is not None and v in defined_at:
+                spec = graph.value_spec(v)
+                if (spec.shape != st.out_spec.shape
+                        or spec.dtype != st.out_spec.dtype):
+                    diags.append(_err(
+                        "HZD014",
+                        f"stage {st.stage!r} donates {v!r} "
+                        f"({spec.shape}/{spec.dtype}) into an output of "
+                        f"{st.out_spec.shape}/{st.out_spec.dtype}: "
+                        f"aliased buffers differ in extent",
+                        stage=st.stage, value=v))
+
+    # ---- double-buffer rotation depth (needs the memory plan)
+    if plan is not None and report.mode == "pipelined":
+        for v, didx in defined_at.items():
+            if didx < 0 or v not in last_read or v not in plan.buffers:
+                continue
+            buf = plan.buffers[v]
+            if buf.resident:
+                continue
+            span = last_read[v] - didx
+            if span >= buf.copies:
+                diags.append(_err(
+                    "HZD020",
+                    f"{v!r} is produced at stage "
+                    f"{report.stages[didx].stage!r} and still read "
+                    f"{span} stages later, but its buffer rotates over "
+                    f"{buf.copies} copies: tile t's data is overwritten "
+                    f"by tile t+{buf.copies} in the tick it is read",
+                    value=v, buffer=v))
+    return diags

@@ -1,0 +1,189 @@
+"""Checker 2 — memory-plan verification for ``AllocationPlan``.
+
+The static-allocation pass packs every pipeline value into the shared
+SPM; this checker proves the resulting plan is actually executable:
+
+  * **MEM001** two live buffers overlap (the classic silent corruption a
+    hand-written allocator ships: both stages "work", the data is wrong);
+  * **MEM002** a buffer extends past the SPM (copies included — a
+    double-buffered value needs ``2 * nbytes``);
+  * **MEM003** a resident buffer is double-buffered (residents never
+    rotate; two copies of a weight is either waste or a stale alias);
+  * **MEM004** a value the schedule moves has no SPM buffer;
+  * **MEM005** a buffer is smaller than the tile it must hold;
+  * **MEM006** an offset breaks the 64 B TCDM/lane alignment contract;
+  * **MEM007** the recorded high-water mark disagrees with the extent
+    implied by the offsets (cost model and allocator seeing different
+    numbers).
+
+Zero-byte buffers are arena aliases (``weight_streaming`` stages every
+weight through one shared arena); they are exempt from overlap — aliasing
+is their purpose — but must sit inside an existing arena buffer.
+"""
+from __future__ import annotations
+
+from repro.core.allocation import AllocationPlan
+from repro.core.graph import Graph
+
+from repro.analysis.diagnostics import Diagnostic, Severity
+
+__all__ = ["check_allocation"]
+
+PASS = "memplan"
+ALIGN = 64
+
+
+def _err(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.ERROR, msg, dict(anchor), PASS)
+
+
+def _warn(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.WARNING, msg, dict(anchor), PASS)
+
+
+def check_allocation(
+    graph: Graph,
+    plan: AllocationPlan,
+    *,
+    n_tiles: int,
+    streamed: tuple[str, ...] = (),
+    pipelined: bool = True,
+) -> list[Diagnostic]:
+    diags: list[Diagnostic] = []
+    bufs = plan.buffers
+
+    # ---- MEM004: every scheduled value has a buffer
+    moved = list(streamed) + [n.name for n in graph.nodes]
+    for v in moved:
+        if v not in bufs:
+            diags.append(_err(
+                "MEM004",
+                f"{v!r} is moved by the schedule but has no SPM buffer "
+                f"in the plan",
+                buffer=v))
+
+    # ---- MEM001: pairwise interval overlap among live (nbytes>0) buffers.
+    # In the pipelined steady state every buffer is live simultaneously,
+    # so any overlap is corruption.  In sequential mode first-fit reuse
+    # legitimately re-issues freed intervals — overlap there is checked
+    # against liveness instead.
+    live = sorted(
+        (b for b in bufs.values() if b.nbytes > 0),
+        key=lambda b: b.offset)
+    if pipelined:
+        prev = None
+        for b in live:
+            if prev is not None and b.offset < prev.offset + \
+                    prev.total_bytes:
+                diags.append(_err(
+                    "MEM001",
+                    f"buffers {prev.value!r} "
+                    f"[{prev.offset}, {prev.offset + prev.total_bytes}) "
+                    f"and {b.value!r} [{b.offset}, "
+                    f"{b.offset + b.total_bytes}) overlap — concurrent "
+                    f"pipeline stages would corrupt each other",
+                    buffer=b.value, other=prev.value))
+            if prev is None or (b.offset + b.total_bytes
+                                > prev.offset + prev.total_bytes):
+                prev = b
+    else:
+        # sequential: overlapping buffers must have disjoint live ranges
+        order = {n.name: i for i, n in enumerate(graph.nodes)}
+        last_use: dict[str, int] = {}
+        for i, node in enumerate(graph.nodes):
+            for v in node.inputs:
+                last_use[v] = i
+        for o in graph.outputs:
+            last_use[o] = len(graph.nodes)
+
+        def live_range(v: str) -> tuple[int, int]:
+            birth = order.get(v, -1)       # graph inputs live from -1
+            return birth, last_use.get(v, birth)
+
+        for i, a in enumerate(live):
+            for b in live[i + 1:]:
+                if b.offset >= a.offset + a.total_bytes:
+                    break
+                a0, a1 = live_range(a.value)
+                b0, b1 = live_range(b.value)
+                if a0 <= b1 and b0 <= a1:
+                    diags.append(_err(
+                        "MEM001",
+                        f"buffers {a.value!r} and {b.value!r} overlap "
+                        f"while both are live (stages {max(a0, b0)}"
+                        f"..{min(a1, b1)})",
+                        buffer=b.value, other=a.value))
+
+    for b in bufs.values():
+        # ---- MEM002: inside the SPM
+        end = b.offset + b.total_bytes
+        if b.offset < 0 or end > plan.spm_bytes:
+            diags.append(_err(
+                "MEM002",
+                f"buffer {b.value!r} [{b.offset}, {end}) falls outside "
+                f"the {plan.spm_bytes} B SPM",
+                buffer=b.value))
+        # ---- MEM003: residents never rotate
+        if b.resident and b.copies != 1:
+            diags.append(_err(
+                "MEM003",
+                f"resident buffer {b.value!r} has {b.copies} rotating "
+                f"copies — a resident value must have exactly one "
+                f"(rotation would read a stale bank)",
+                buffer=b.value))
+        # ---- MEM006: alignment
+        if b.offset % ALIGN:
+            diags.append(_warn(
+                "MEM006",
+                f"buffer {b.value!r} offset {b.offset} breaks the "
+                f"{ALIGN} B superbank-row alignment",
+                buffer=b.value))
+        # ---- zero-byte arena aliases must land inside a real buffer
+        if b.nbytes == 0:
+            host = [o for o in bufs.values()
+                    if o.nbytes > 0 and o.offset <= b.offset
+                    < o.offset + o.total_bytes]
+            if not host:
+                diags.append(_err(
+                    "MEM002",
+                    f"arena alias {b.value!r} at offset {b.offset} "
+                    f"points at no allocated buffer",
+                    buffer=b.value))
+
+    # ---- MEM005: buffer large enough for its tile (weights included —
+    # they are not "moved" per tile but still occupy planned SPM)
+    for v in dict.fromkeys(moved + list(graph.inputs)):
+        b = bufs.get(v)
+        if b is None:
+            continue
+        spec = graph.value_spec(v)
+        tiled = v not in graph.inputs or v in streamed
+        need = spec.nbytes // n_tiles if tiled else spec.nbytes
+        cap = b.nbytes
+        if cap == 0:                       # arena alias: use arena size
+            arena = bufs.get("__weight_arena__")
+            cap = arena.nbytes if arena is not None else 0
+        if cap < need:
+            diags.append(_err(
+                "MEM005",
+                f"buffer {v!r} holds {cap} B but the "
+                f"{'tile' if tiled else 'value'} needs {need} B — "
+                f"writes would spill into the neighbouring buffer",
+                buffer=v))
+
+    # ---- MEM007: recorded peak vs offset-implied extent
+    extent = plan.high_water()
+    if plan.peak_bytes and plan.peak_bytes < extent:
+        diags.append(_err(
+            "MEM007",
+            f"plan records peak_bytes={plan.peak_bytes} but the buffer "
+            f"offsets imply an extent of {extent} B — the cost model "
+            f"is under-reporting SPM pressure",
+            peak=plan.peak_bytes, extent=extent))
+    if plan.used_bytes > plan.spm_bytes:
+        diags.append(_err(
+            "MEM002",
+            f"plan high-water mark {plan.used_bytes} B exceeds the "
+            f"{plan.spm_bytes} B SPM",
+            peak=plan.used_bytes))
+    return diags

@@ -1,0 +1,135 @@
+"""The pass framework: artifacts in, structured diagnostics out.
+
+``analyze_pipeline`` is the compiler-side entry point: given the outputs
+of the four lowering passes (graph, placement, allocation plan, schedule
+report) it runs every registered analysis pass and aggregates a
+:class:`Report`.  Missing artifacts are built with the production passes
+themselves — so the analyzer always checks what would actually run — and
+a lowering pass that *raises* is converted into a ``PIPE001`` diagnostic
+instead of crashing the analysis (design-time feedback, not a stack
+trace).
+
+New checkers self-register with :func:`register_pass`; each receives the
+full :class:`PipelineArtifacts` bundle and returns plain diagnostics, so
+cross-artifact rules (e.g. the hazard pass reading both the schedule and
+the memory plan) need no extra plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal
+
+from repro.core.allocation import AllocationPlan, allocate
+from repro.core.cluster import Cluster
+from repro.core.graph import Graph
+from repro.core.schedule import ScheduleReport, build_schedule
+
+from repro.analysis.diagnostics import Diagnostic, Report, Severity
+from repro.analysis.hazards import check_schedule
+from repro.analysis.memplan import check_allocation
+from repro.analysis.streams import check_streamers
+
+__all__ = ["PipelineArtifacts", "register_pass", "analyze_pipeline"]
+
+
+@dataclasses.dataclass
+class PipelineArtifacts:
+    """Everything the lowering pipeline produced for one workload."""
+
+    graph: Graph
+    placement: dict[str, str]
+    cluster: Cluster
+    plan: AllocationPlan | None
+    schedule: ScheduleReport | None
+    n_tiles: int
+    streamed: tuple[str, ...]
+    pipelined: bool
+
+
+PassFn = Callable[[PipelineArtifacts], list[Diagnostic]]
+_PASSES: dict[str, PassFn] = {}
+
+
+def register_pass(name: str) -> Callable[[PassFn], PassFn]:
+    def deco(fn: PassFn) -> PassFn:
+        _PASSES[name] = fn
+        return fn
+    return deco
+
+
+@register_pass("streams")
+def _streams_pass(art: PipelineArtifacts) -> list[Diagnostic]:
+    return check_streamers(
+        art.graph, art.placement, art.cluster,
+        n_tiles=art.n_tiles, streamed=art.streamed)
+
+
+@register_pass("memplan")
+def _memplan_pass(art: PipelineArtifacts) -> list[Diagnostic]:
+    if art.plan is None:
+        return []
+    return check_allocation(
+        art.graph, art.plan, n_tiles=art.n_tiles,
+        streamed=art.streamed, pipelined=art.pipelined)
+
+
+@register_pass("hazards")
+def _hazards_pass(art: PipelineArtifacts) -> list[Diagnostic]:
+    if art.schedule is None:
+        return []
+    return check_schedule(art.graph, art.schedule, plan=art.plan)
+
+
+def analyze_pipeline(
+    graph: Graph,
+    placement: dict[str, str],
+    cluster: Cluster,
+    *,
+    n_tiles: int = 1,
+    streamed: tuple[str, ...] = (),
+    mode: Literal["pipelined", "sequential"] = "pipelined",
+    weight_streaming: bool = False,
+    plan: AllocationPlan | None = None,
+    report: ScheduleReport | None = None,
+    subject: str = "",
+    lower: bool = True,
+) -> Report:
+    """Statically verify one lowered workload; never raises.
+
+    ``plan`` / ``report`` default to running the production allocation
+    and scheduling passes — callers that already lowered (``emit``) pass
+    their own artifacts so the analyzer sees the exact program that will
+    execute.  ``lower=False`` skips building missing artifacts (the
+    untiled ``emit`` path compiles one fused program that never touches
+    the SPM plan — only placement/streamer legality applies).
+    """
+    out = Report(subject=subject or f"{cluster.name} x {graph.name}")
+    if plan is None and lower:
+        try:
+            plan = allocate(
+                graph, cluster, n_tiles=n_tiles, streamed=streamed,
+                pipelined=(mode == "pipelined"),
+                weight_streaming=weight_streaming)
+        except ValueError as e:
+            out.extend([Diagnostic(
+                "PIPE001", Severity.ERROR,
+                f"allocation pass failed: {e}", {"pass": "allocate"})],
+                passname="framework")
+    if report is None and lower:
+        try:
+            report = build_schedule(
+                graph, placement, cluster, plan=plan, n_tiles=n_tiles,
+                streamed=streamed, mode=mode,
+                weight_streaming=weight_streaming)
+        except ValueError as e:
+            out.extend([Diagnostic(
+                "PIPE001", Severity.ERROR,
+                f"scheduling pass failed: {e}", {"pass": "schedule"})],
+                passname="framework")
+    art = PipelineArtifacts(
+        graph=graph, placement=placement, cluster=cluster, plan=plan,
+        schedule=report, n_tiles=n_tiles, streamed=tuple(streamed),
+        pipelined=(mode == "pipelined"))
+    for name, fn in _PASSES.items():
+        out.extend(fn(art), passname=name)
+    return out

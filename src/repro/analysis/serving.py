@@ -1,0 +1,192 @@
+"""Checker 4 — serving-invariant verification of the paged-KV control
+plane.
+
+Abstractly interprets a ``PagePool`` operation trace (recorded with
+``PagePool(..., record=True)``): the interpreter maintains, per page, a
+*model* refcount split by owner — ``slot`` references (held by active
+requests' page tables, including prefix pages ``match()`` retained on
+their behalf) and ``tree`` references (held by prefix-tree nodes) — plus
+a model free set.  Divergence between the model and what the operations
+claim is a control-plane bug:
+
+  * **SRV001** refcount leak: at end of trace a page holds more
+    references than its known holders account for (a retired slot that
+    never released, the pool-exhaustion failure mode);
+  * **SRV002** double-release / foreign release: an owner drops a
+    reference it does not hold;
+  * **SRV003** eviction of a referenced page: the tree reclaims a page
+    an active slot still reads — KV corruption under the slot's feet;
+  * **SRV004** allocation of a live page: the free list handed out a
+    page whose refcount never reached zero;
+  * **SRV005** retain of an unreferenced (free) page — resurrecting a
+    page after its last release;
+  * **SRV006** model/pool divergence: the replayed refcounts disagree
+    with the live ``pool.refs`` array (the abstract model and the
+    implementation no longer describe the same machine).
+
+``check_serving_trace`` is pure over the trace, so tests can feed
+hand-built traces with injected violations; ``verify_pool`` wraps it for
+a live pool + tree + slot tables (what ``Server.verify()`` calls).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.analysis.diagnostics import Diagnostic, Severity
+
+__all__ = ["check_serving_trace", "verify_pool"]
+
+PASS = "serving"
+
+
+def _err(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.ERROR, msg, dict(anchor), PASS)
+
+
+def check_serving_trace(
+    trace: Sequence[tuple],
+    n_pages: int,
+    *,
+    live_slot_pages: Iterable[Sequence[int]] = (),
+    tree_pages: Iterable[int] = (),
+) -> list[Diagnostic]:
+    """Replay ``trace`` through the abstract refcount machine.
+
+    ``live_slot_pages`` are the page tables of slots still active at the
+    end of the trace; ``tree_pages`` the pages currently cached by tree
+    nodes (one entry per node).  Together they are the legitimate
+    end-of-trace holders: any model reference beyond them is a leak.
+    """
+    diags: list[Diagnostic] = []
+    slot_refs = [0] * n_pages
+    tree_refs = [0] * n_pages
+    free = set(range(n_pages))
+
+    def refs(owner: str) -> list[int]:
+        return tree_refs if owner == "tree" else slot_refs
+
+    for opidx, op in enumerate(trace):
+        kind = op[0]
+        if kind == "alloc":
+            for p in op[1]:
+                if p not in free or slot_refs[p] + tree_refs[p] > 0:
+                    diags.append(_err(
+                        "SRV004",
+                        f"op {opidx}: alloc handed out page {p} which "
+                        f"still holds {slot_refs[p]} slot + "
+                        f"{tree_refs[p]} tree reference(s)",
+                        page=int(p), op=opidx))
+                else:
+                    free.discard(p)
+                slot_refs[p] += 1          # alloc's reference is caller's
+        elif kind == "retain":
+            _, pages, owner = op
+            for p in pages:
+                if slot_refs[p] + tree_refs[p] <= 0:
+                    diags.append(_err(
+                        "SRV005",
+                        f"op {opidx}: {owner} retain of unreferenced "
+                        f"page {p} — resurrecting a freed page",
+                        page=int(p), op=opidx, owner=owner))
+                refs(owner)[p] += 1
+                free.discard(p)
+        elif kind == "release":
+            _, pages, owner, evict = op
+            for p in pages:
+                if evict and slot_refs[p] > 0:
+                    diags.append(_err(
+                        "SRV003",
+                        f"op {opidx}: tree evicted page {p} while "
+                        f"{slot_refs[p]} active slot reference(s) still "
+                        f"read it — KV contents reclaimed under a "
+                        f"running request",
+                        page=int(p), op=opidx))
+                if refs(owner)[p] <= 0:
+                    diags.append(_err(
+                        "SRV002",
+                        f"op {opidx}: {owner} released page {p} without "
+                        f"holding a reference "
+                        f"(slot={slot_refs[p]}, tree={tree_refs[p]}) — "
+                        f"double release or foreign release",
+                        page=int(p), op=opidx, owner=owner))
+                else:
+                    refs(owner)[p] -= 1
+                if slot_refs[p] + tree_refs[p] == 0:
+                    free.add(p)
+        else:
+            diags.append(_err(
+                "SRV000",
+                f"op {opidx}: unknown trace operation {kind!r}",
+                op=opidx))
+
+    # ---- end-of-trace accounting against the known holders
+    want_slot = [0] * n_pages
+    for table in live_slot_pages:
+        for p in table:
+            want_slot[p] += 1
+    want_tree = [0] * n_pages
+    for p in tree_pages:
+        want_tree[p] += 1
+    for p in range(n_pages):
+        if slot_refs[p] != want_slot[p]:
+            kind = "leak" if slot_refs[p] > want_slot[p] else "deficit"
+            diags.append(_err(
+                "SRV001",
+                f"page {p}: {slot_refs[p]} slot reference(s) in the "
+                f"trace but {want_slot[p]} active holder(s) — refcount "
+                f"{kind} (a retired request "
+                f"{'never released' if kind == 'leak' else 'over-released'}"
+                f" its pages)",
+                page=p))
+        if tree_refs[p] != want_tree[p]:
+            diags.append(_err(
+                "SRV001",
+                f"page {p}: {tree_refs[p]} tree reference(s) in the "
+                f"trace but {want_tree[p]} tree node(s) cache it",
+                page=p))
+    return diags
+
+
+def _tree_pages(tree) -> list[int]:
+    """All pages cached by ``tree``'s nodes (one entry per node)."""
+    pages: list[int] = []
+    stack = list(tree.root.children.values())
+    while stack:
+        nd = stack.pop()
+        pages.append(nd.page)
+        stack.extend(nd.children.values())
+    return pages
+
+
+def verify_pool(pool, tree=None,
+                live_slot_pages: Iterable[Sequence[int]] = ()
+                ) -> list[Diagnostic]:
+    """Check a live pool's recorded trace and cross-check the replayed
+    model against the implementation's actual ``refs`` array."""
+    if pool.trace is None:
+        raise ValueError(
+            "pool has no recorded trace — construct it with "
+            "PagePool(..., record=True)")
+    tp = _tree_pages(tree) if tree is not None else []
+    tables = [list(t) for t in live_slot_pages]
+    diags = check_serving_trace(
+        pool.trace, pool.n_pages,
+        live_slot_pages=tables, tree_pages=tp)
+    # model vs implementation: replay once more, sum owners, compare
+    slot = [0] * pool.n_pages
+    for t in tables:
+        for p in t:
+            slot[p] += 1
+    for p in tp:
+        slot[p] += 1
+    for p in range(pool.n_pages):
+        if int(pool.refs[p]) != slot[p] and not any(
+                d.rule == "SRV001" and d.anchor.get("page") == p
+                for d in diags):
+            diags.append(_err(
+                "SRV006",
+                f"page {p}: pool.refs says {int(pool.refs[p])} but the "
+                f"known holders account for {slot[p]} — the abstract "
+                f"model and the implementation diverged",
+                page=p))
+    return diags

@@ -1,0 +1,181 @@
+"""Checker 3 — streamer/port legality against each ``AcceleratorSpec``.
+
+Cross-checks the placement and the per-accelerator streamer geometry:
+
+  * **STR001** placement names an accelerator the cluster doesn't have;
+  * **STR002** a node is placed on an accelerator whose datapath does
+    not implement its kernel (the dispatch would KeyError — or worse,
+    a uniform-interface lookup could silently run the wrong kernel);
+  * **STR003** port starvation: the node moves more operands+output than
+    the accelerator has streamer ports (``assign_ports`` raises at
+    schedule time; here it is a diagnostic with the exact node anchor);
+  * **STR004** element-width truncation: an operand's element is wider
+    than the port that streams it;
+  * **STR005** sub-byte / irregular element widths that don't pack into
+    bytes (3-bit etc.) — legal in the model via ceil-division but almost
+    always a configuration typo;
+  * **STR006** degenerate port geometry (empty block, zero port width);
+  * **STR007** single-buffered FIFO (``fifo_depth < 2``): the DMA
+    latency the double buffer exists to hide is exposed every block;
+  * **STR008** the cluster's streamer FIFO footprints overflow the SPM
+    budget (mirrors ``Cluster.validate_spm`` as a diagnostic);
+  * **STR009** port-coverage mismatch: the dataflow loop bounds assigned
+    to a port move fewer bytes than the operand holds — traffic the
+    cost model would silently drop.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.accelerator import assign_ports
+from repro.core.cluster import Cluster
+from repro.core.graph import Graph
+
+from repro.analysis.diagnostics import Diagnostic, Severity
+
+__all__ = ["check_streamers"]
+
+PASS = "streams"
+_PACKED_BITS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def _err(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.ERROR, msg, dict(anchor), PASS)
+
+
+def _warn(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.WARNING, msg, dict(anchor), PASS)
+
+
+def _dtype_bits(dtype: str) -> int | None:
+    import numpy as np
+    try:
+        return int(np.dtype(dtype).itemsize) * 8
+    except TypeError:               # sub-byte/custom dtypes: skip STR004
+        return None
+
+
+def check_streamers(
+    graph: Graph,
+    placement: dict[str, str],
+    cluster: Cluster,
+    *,
+    n_tiles: int = 1,
+    streamed: tuple[str, ...] = (),
+) -> list[Diagnostic]:
+    diags: list[Diagnostic] = []
+    accel_names = {a.name for a in cluster.accelerators}
+
+    # ---- per-accelerator geometry (checked once per spec)
+    for spec in cluster.accelerators:
+        for port in spec.streamers:
+            if not port.block_shape or math.prod(port.block_shape) <= 0:
+                diags.append(_err(
+                    "STR006",
+                    f"port {port.name!r} on {spec.name!r} has a "
+                    f"degenerate block shape {port.block_shape}",
+                    accelerator=spec.name, port=port.name))
+            if port.port_bits <= 0:
+                diags.append(_err(
+                    "STR006",
+                    f"port {port.name!r} on {spec.name!r} has "
+                    f"port_bits={port.port_bits}",
+                    accelerator=spec.name, port=port.name))
+            if port.elem_bits not in _PACKED_BITS:
+                diags.append(_warn(
+                    "STR005",
+                    f"port {port.name!r} on {spec.name!r} streams "
+                    f"{port.elem_bits}-bit elements, which do not pack "
+                    f"into bytes — footprint is ceil-divided, check "
+                    f"this is intentional",
+                    accelerator=spec.name, port=port.name))
+            if port.fifo_depth < 2:
+                diags.append(_warn(
+                    "STR007",
+                    f"port {port.name!r} on {spec.name!r} has "
+                    f"fifo_depth={port.fifo_depth}: no double buffering, "
+                    f"DMA latency is exposed on every block",
+                    accelerator=spec.name, port=port.name))
+
+    # ---- SPM budget across all streamer FIFOs
+    total = sum(a.vmem_bytes for a in cluster.accelerators)
+    if total > cluster.hw.spm_bytes:
+        diags.append(_err(
+            "STR008",
+            f"streamer FIFO footprints total {total} B, exceeding the "
+            f"{cluster.hw.spm_bytes} B SPM budget",
+            cluster=cluster.name))
+
+    # ---- per-node legality on its placed accelerator
+    streamed_set = set(streamed)
+    for node in graph.topo():
+        accel = placement.get(node.name)
+        if accel is None:
+            diags.append(_err(
+                "STR001",
+                f"node {node.name!r} has no placement",
+                node=node.name))
+            continue
+        if accel not in accel_names:
+            diags.append(_err(
+                "STR001",
+                f"node {node.name!r} is placed on unknown accelerator "
+                f"{accel!r} (cluster has {sorted(accel_names)})",
+                node=node.name, accelerator=accel))
+            continue
+        spec = cluster.accel(accel)
+        if not spec.supports(node.kernel):
+            diags.append(_err(
+                "STR002",
+                f"node {node.name!r} (kernel {node.kernel!r}) is placed "
+                f"on {accel!r}, which only implements "
+                f"{sorted(spec.kernels)}",
+                node=node.name, accelerator=accel))
+        if not spec.streamers:
+            continue                      # host core: LSU path, no ports
+
+        def _tiled(v: str) -> bool:
+            return v not in graph.inputs or v in streamed_set
+        operand_bytes = [
+            graph.value_spec(i).nbytes
+            // (n_tiles if _tiled(i) else 1)
+            for i in node.inputs
+        ] + [node.out.nbytes // n_tiles]
+        if len(spec.streamers) < len(operand_bytes):
+            diags.append(_err(
+                "STR003",
+                f"node {node.name!r} moves {len(operand_bytes)} "
+                f"operands+output but {accel!r} has only "
+                f"{len(spec.streamers)} streamer ports — traffic would "
+                f"be dropped from the dataflow and the cost model",
+                node=node.name, accelerator=accel))
+            continue
+        # element-width legality per port, in declaration order
+        # (operands first, output on the last used port)
+        dtypes = [graph.value_spec(i).dtype for i in node.inputs] \
+            + [node.out.dtype]
+        for port, dt in zip(spec.streamers, dtypes):
+            bits = _dtype_bits(dt)
+            if bits is not None and bits > port.elem_bits:
+                diags.append(_err(
+                    "STR004",
+                    f"node {node.name!r}: {dt} elements "
+                    f"({bits} bit) streamed through "
+                    f"{port.elem_bits}-bit port {port.name!r} on "
+                    f"{accel!r} would be truncated",
+                    node=node.name, accelerator=accel, port=port.name))
+        # dataflow coverage: assigned loop bounds must move the operand
+        dataflow = assign_ports(spec, operand_bytes, node.name)
+        for port, nbytes in zip(spec.streamers, operand_bytes):
+            bounds = dataflow.get(port.name)
+            if bounds is None:
+                continue
+            moved = math.prod(bounds) * max(port.block_bytes, 1)
+            if moved < nbytes:
+                diags.append(_err(
+                    "STR009",
+                    f"node {node.name!r}: port {port.name!r} dataflow "
+                    f"moves {moved} B of a {nbytes} B operand — "
+                    f"{nbytes - moved} B of traffic is unaccounted",
+                    node=node.name, accelerator=accel, port=port.name))
+    return diags

@@ -103,7 +103,7 @@ class Task:
         # port-bandwidth-limited streaming: widest-port assumption, all ports
         # run concurrently, the slowest port bounds the datapath.
         if spec.streamers:
-            per_port = []
+            per_port: list[int] = []
             for s in spec.streamers:
                 bounds = self.dataflow.get(s.name)
                 n_blocks = math.prod(bounds) if bounds else 0

@@ -42,8 +42,21 @@ class AllocationPlan:
 
     @property
     def used_bytes(self) -> int:
-        return self.peak_bytes or sum(
-            b.total_bytes for b in self.buffers.values())
+        """SPM high-water mark of the plan.
+
+        ``allocate()`` records ``peak_bytes`` eagerly; for hand-built
+        plans the fallback is the arena extent (max offset + size), NOT
+        the sum of buffer sizes — summing double-counts nothing but also
+        ignores reuse, so the analyzer and the cost model would disagree
+        on the same plan.
+        """
+        return self.peak_bytes or self.high_water()
+
+    def high_water(self) -> int:
+        """Arena extent implied by the buffer offsets alone."""
+        return max(
+            (b.offset + b.total_bytes for b in self.buffers.values()),
+            default=0)
 
     def buffer(self, value: str) -> Buffer:
         return self.buffers[value]
@@ -110,7 +123,7 @@ def allocate(
         # recycled after its last consumer (the paper's static-allocation
         # pass exploits exactly this producer-consumer structure).
         nodes = list(graph.topo())
-        last_use = {}
+        last_use: dict[str, int] = {}
         for idx, node in enumerate(nodes):
             for v in node.inputs:
                 last_use[v] = idx
@@ -141,8 +154,14 @@ def allocate(
                     if b.nbytes:
                         free.append((b.offset, b.nbytes))
 
+    # eager high-water mark: ``offset`` is the arena end for both the
+    # pipelined (no reuse) and sequential (first-fit) branches, but the
+    # buffer-extent maximum is authoritative — the analyzer cross-checks
+    # the two (rule MEM007) so they can never drift apart silently.
+    extent = max((b.offset + b.total_bytes for b in buffers.values()),
+                 default=0)
     plan = AllocationPlan(buffers, cluster.hw.spm_bytes,
-                          peak_bytes=offset)
+                          peak_bytes=max(offset, extent))
     if plan.used_bytes > cluster.hw.spm_bytes:
         raise ValueError(
             f"SPM overflow: plan needs {plan.used_bytes} B > "

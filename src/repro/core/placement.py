@@ -55,7 +55,7 @@ def place(
     """
     placement: dict[str, str] = {}
     for node in graph.topo():
-        ranked = []
+        ranked: list[tuple[int, AcceleratorSpec]] = []
         for a in cluster.supporting(node.kernel):
             if a.name in disabled:
                 continue

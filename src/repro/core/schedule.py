@@ -20,6 +20,7 @@ Fig. 10 benchmarks:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Literal
 
 from repro.core.accelerator import Task, assign_ports
@@ -27,7 +28,8 @@ from repro.core.allocation import AllocationPlan
 from repro.core.cluster import Cluster
 from repro.core.graph import Graph, TensorSpec
 
-__all__ = ["StageTask", "ScheduleReport", "build_schedule"]
+__all__ = ["StageTask", "ScheduleReport", "build_schedule",
+           "stage_consumers", "donation_argnums"]
 
 DMA = "dma-engine"
 
@@ -69,7 +71,58 @@ class ScheduleReport:
         return len(self.stages)
 
     def speedup_over(self, other: "ScheduleReport") -> float:
+        if self.total_cycles == 0:
+            # degenerate empty-graph schedule: nothing ran, so any finite
+            # baseline is "infinitely" faster — warn instead of dividing
+            warnings.warn(
+                f"speedup_over on a zero-cycle {self.mode} schedule "
+                f"({self.n_stages} stages, {self.n_tiles} tiles) — "
+                f"returning inf", stacklevel=2)
+            return float("inf")
         return other.total_cycles / self.total_cycles
+
+
+def stage_consumers(stages: list[StageTask]) -> dict[str, int]:
+    """value -> number of consuming stages (incl. DMA-out for outputs).
+
+    ``dma_in`` *produces* the streamed tile slices, so it is not a
+    consumer — counting it would pin every slice forever and disable
+    donation for streamed activations.  Shared by the runtime executor
+    (liveness release + donation) and the hazard checker
+    (``repro.analysis.hazards``), so what the analyzer proves is exactly
+    what the executor does.
+    """
+    consumers: dict[str, int] = {}
+    for st in stages:
+        if st.stage == "dma_in":
+            continue
+        for i in st.inputs:
+            consumers[i] = consumers.get(i, 0) + 1
+    return consumers
+
+
+def donation_argnums(st: StageTask, graph: Graph,
+                     consumers: dict[str, int]) -> tuple[int, ...]:
+    """Argument indices of ``st`` whose buffers may be donated in place.
+
+    The rule (single consumer, tiled, not a graph output, same
+    shape/dtype as the stage output) is the executor's odd/even SPM-bank
+    aliasing: XLA writes the stage output into the operand's buffer.
+    Deriving it here, from the schedule artifacts alone, lets the hazard
+    checker re-verify each donation against independently computed
+    liveness before anything is dispatched.
+    """
+    donate: list[int] = []
+    if st.out_spec is None:
+        return ()
+    for idx, name in enumerate(st.inputs):
+        if (name in st.tiled_inputs
+                and name not in graph.outputs
+                and consumers.get(name) == 1
+                and graph.value_spec(name).shape == st.out_spec.shape
+                and graph.value_spec(name).dtype == st.out_spec.dtype):
+            donate.append(idx)
+    return tuple(donate)
 
 
 def _node_task(graph: Graph, node_name: str, accel_name: str,

@@ -145,6 +145,8 @@ def drain(server: "Server", pending: list[Request], *,
             if r.done:
                 inflight.remove(r)
                 done.append(r)
+    if getattr(server, "verify_enabled", False):
+        server.verify()          # raises AnalysisError on any violation
     return done
 
 
@@ -167,7 +169,7 @@ class Server:
     def __init__(self, cfg, params, *, batch: int, max_len: int,
                  microbatches: int = 1, eos_id: int | None = None,
                  paged: bool | None = None, page_size: int = 0,
-                 pool_pages: int = 0):
+                 pool_pages: int = 0, verify: bool = False):
         if microbatches < 1:
             raise ValueError(f"microbatches must be >= 1, got {microbatches}")
         if batch % microbatches:
@@ -184,6 +186,10 @@ class Server:
             raise ValueError(
                 f"family {cfg.family} does not support the paged KV cache")
         self.paged = paged
+        # verify: record every pool operation so the serving-invariant
+        # checker (repro.analysis.serving) can abstractly interpret the
+        # control plane's behaviour — drain() re-verifies at the end
+        self.verify_enabled = verify
         if paged:
             self.page_size = page_size or cfg.kv_page_size or 8
             self.n_slot_pages = -(-max_len // self.page_size)
@@ -191,7 +197,8 @@ class Server:
             # prefix tree can retain shared prompts past retirement
             self.pool_pages = (pool_pages or cfg.kv_pool_pages
                                or 2 * self.mb * self.n_slot_pages)
-            self.pools = [PagePool(self.pool_pages, self.page_size)
+            self.pools = [PagePool(self.pool_pages, self.page_size,
+                                   record=verify)
                           for _ in range(microbatches)]
             self.trees = [PrefixTree(pool) for pool in self.pools]
         self.caches = [
@@ -382,6 +389,26 @@ class Server:
         self.tick_wall_s.append(time.perf_counter() - t0)
         return True
 
+    # ------------------------------------------------------------ verify
+    def verify(self):
+        """Run the serving-invariant checker over every shard's recorded
+        pool trace: refcount leaks, double releases, eviction of pages an
+        active slot still references, and model-vs-implementation
+        refcount divergence.  Raises ``AnalysisError`` on any error;
+        returns the aggregated :class:`repro.analysis.Report`."""
+        from repro.analysis import Report, verify_pool
+        if not (self.paged and self.verify_enabled):
+            return Report(subject="serving (verification disabled)")
+        out = Report(subject=f"serving {self.cfg.name} "
+                             f"({self.microbatches} shard(s))")
+        for shard, (pool, tree) in enumerate(zip(self.pools, self.trees)):
+            live = [self.slot_pages[i]
+                    for i in range(shard * self.mb, (shard + 1) * self.mb)
+                    if self.slot_pages[i] is not None]
+            out.extend(verify_pool(pool, tree, live_slot_pages=live),
+                       passname="serving")
+        return out.raise_on_error()
+
     # ------------------------------------------------------------- stats
     @property
     def pages_in_use(self) -> int:
@@ -447,6 +474,10 @@ def main(argv=None):
                          "bit-identical to its single-request reference "
                          "(decoded through the DENSE layout: a cross-"
                          "layout oracle)")
+    ap.add_argument("--verify", action="store_true",
+                    help="record page-pool operation traces and run the "
+                         "serving-invariant checker (repro.analysis) "
+                         "over them when the server drains")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -459,7 +490,8 @@ def main(argv=None):
     server = Server(cfg, params, batch=args.batch, max_len=max_len,
                     microbatches=args.microbatches, eos_id=args.eos_id,
                     paged=False if args.dense else None,
-                    page_size=args.page_size, pool_pages=args.pool_pages)
+                    page_size=args.page_size, pool_pages=args.pool_pages,
+                    verify=args.verify)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size,
@@ -483,6 +515,10 @@ def main(argv=None):
           f"{server.ticks} decode ticks, "
           f"{server.queue.dispatched} queue dispatches incl. prefill)")
     print(f"stats: {server.stats()}")
+    if args.verify and server.paged:
+        n_ops = sum(len(p.trace or ()) for p in server.pools)
+        print(f"verify: serving-invariant checker passed over {n_ops} "
+              f"traced pool operation(s)")
     if args.eos_id is None:
         assert all(len(r.out) == r.max_new for r in done)
     if args.check:

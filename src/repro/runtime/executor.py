@@ -35,7 +35,9 @@ import jax.numpy as jnp
 
 from repro.core.cluster import Cluster
 from repro.core.graph import Graph
-from repro.core.schedule import ScheduleReport, StageTask
+from repro.core.schedule import (
+    ScheduleReport, StageTask, donation_argnums, stage_consumers,
+)
 
 __all__ = ["DeviceQueue", "AsyncExecutor"]
 
@@ -97,16 +99,10 @@ class AsyncExecutor:
                     f"{name}: dim0 {graph.inputs[name].shape[0]} not "
                     f"divisible by n_tiles={self.n_tiles}")
 
-        # value -> number of consuming stages (incl. DMA-out for outputs).
-        # dma_in *produces* the streamed tile slices, so it is not a
-        # consumer — counting it would pin every slice in env forever and
-        # disable donation for streamed activations.
-        self._consumers: dict[str, int] = {}
-        for st in report.stages:
-            if st.stage == "dma_in":
-                continue
-            for i in st.inputs:
-                self._consumers[i] = self._consumers.get(i, 0) + 1
+        # value -> number of consuming stages (incl. DMA-out for outputs);
+        # shared with the hazard checker (repro.analysis) so the donation
+        # and liveness decisions it verifies are the ones executed here.
+        self._consumers: dict[str, int] = stage_consumers(report.stages)
 
         self.queues: dict[str, DeviceQueue] = {
             st.device: DeviceQueue(st.device) for st in report.stages
@@ -127,18 +123,8 @@ class AsyncExecutor:
 
     # ------------------------------------------------------------ compile
     def _compile_stage(self, st: StageTask) -> Callable:
-        donate = []
-        for idx, name in enumerate(st.inputs):
-            if (name in st.tiled_inputs
-                    and name not in self.graph.outputs
-                    and self._consumers.get(name) == 1
-                    and st.out_spec is not None
-                    and self.graph.value_spec(name).shape
-                    == st.out_spec.shape
-                    and self.graph.value_spec(name).dtype
-                    == st.out_spec.dtype):
-                donate.append(idx)
-        return jax.jit(st.fn, donate_argnums=tuple(donate))
+        donate = donation_argnums(st, self.graph, self._consumers)
+        return jax.jit(st.fn, donate_argnums=donate)
 
     @staticmethod
     def _make_slicer(tile_rows: int) -> Callable:

@@ -24,9 +24,21 @@ __all__ = ["PagePool"]
 
 
 class PagePool:
-    """Fixed pool of ``n_pages`` KV pages of ``page_size`` tokens each."""
+    """Fixed pool of ``n_pages`` KV pages of ``page_size`` tokens each.
 
-    def __init__(self, n_pages: int, page_size: int):
+    ``record=True`` keeps an operation trace — tuples of
+    ``("alloc", pages)``, ``("retain", pages, owner)``, and
+    ``("release", pages, owner, evict)`` — that the serving-invariant
+    checker (``repro.analysis.serving``) abstractly interprets to prove
+    refcount discipline (no leaks, no double-release, no eviction of a
+    page an active slot still references).  ``owner`` partitions the
+    refcount between the two holder kinds: ``"slot"`` (a request's page
+    table, including match()-retained prefixes held on the caller's
+    behalf) and ``"tree"`` (prefix-tree nodes).
+    """
+
+    def __init__(self, n_pages: int, page_size: int, *,
+                 record: bool = False):
         if n_pages < 1 or page_size < 1:
             raise ValueError(f"bad pool shape ({n_pages=}, {page_size=})")
         self.n_pages = n_pages
@@ -35,6 +47,7 @@ class PagePool:
         # LIFO free list: recently-freed pages are reused first, which
         # keeps the working set of pool pages small
         self._free = list(range(n_pages - 1, -1, -1))
+        self.trace: list[tuple] | None = [] if record else None
 
     # ------------------------------------------------------------ alloc
     @property
@@ -56,19 +69,28 @@ class PagePool:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self.refs[p] = 1
+        if self.trace is not None:
+            self.trace.append(("alloc", tuple(pages)))
         return pages
 
     # ---------------------------------------------------------- refcount
-    def retain(self, pages) -> None:
+    def retain(self, pages, *, owner: str = "slot") -> None:
         """Add one reference to each page (duplicates counted per entry)."""
         for p in pages:
             if self.refs[p] <= 0:
                 raise ValueError(f"retain of unreferenced page {p}")
             self.refs[p] += 1
+        if self.trace is not None and len(pages):
+            self.trace.append(("retain", tuple(int(p) for p in pages),
+                               owner))
 
-    def release(self, pages) -> int:
+    def release(self, pages, *, owner: str = "slot",
+                evict: bool = False) -> int:
         """Drop one reference per page; pages reaching zero return to the
         free list.  Returns how many pages were actually freed."""
+        if self.trace is not None and len(pages):
+            self.trace.append(("release", tuple(int(p) for p in pages),
+                               owner, evict))
         freed = 0
         for p in pages:
             if self.refs[p] <= 0:

@@ -72,7 +72,7 @@ class PrefixTree:
             child.last_access = self._clock
             pages.append(child.page)
             node = child
-        self.pool.retain(pages)
+        self.pool.retain(pages)          # on the caller's (slot's) behalf
         return pages, len(pages) * p
 
     # ------------------------------------------------------------ insert
@@ -96,7 +96,7 @@ class PrefixTree:
             if child is None:
                 child = _Node(parent=node, key=key, page=slot_pages[j])
                 node.children[key] = child
-                self.pool.retain([child.page])
+                self.pool.retain([child.page], owner="tree")
                 self.nodes += 1
                 created += 1
             child.last_access = self._clock
@@ -129,7 +129,8 @@ class PrefixTree:
                 break
             victim = min(victims, key=lambda nd: nd.last_access)
             del victim.parent.children[victim.key]
-            self.pool.release([victim.page])
+            self.pool.release([victim.page], owner="tree",
+                              evict=True)
             self.nodes -= 1
             freed += 1
         return freed
