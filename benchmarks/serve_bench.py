@@ -10,8 +10,12 @@ served straight from shared pages instead of being recomputed.
 Reported per scenario: decode throughput (tok/s), tick latency p50/p99,
 prefix-cache hit rate, and page-pool occupancy.  With ``check=True``
 every request is additionally verified bit-identical to its dense
-single-request reference.  ``python benchmarks/serve_bench.py`` writes
-the full result set to ``benchmarks/BENCH_serve.json``.
+single-request reference.  A final ``chaos`` row reruns the paged
+workload under a seeded all-classes ``FaultPlan`` and reports the price
+of fault tolerance (retries, recoveries, sheds, survivor count) — with
+``check=True`` the *survivors* are still held to the bit-equivalence
+oracle.  ``python benchmarks/serve_bench.py`` writes the full result
+set to ``benchmarks/BENCH_serve.json``.
 """
 from __future__ import annotations
 
@@ -24,7 +28,9 @@ import numpy as np
 
 import repro.configs as configs
 from repro.configs.base import reduce as reduce_cfg
-from repro.launch.serve import Request, Server, drain, solo_reference
+from repro.launch.serve import (
+    SURVIVOR_REASONS, Request, Server, drain, solo_reference,
+)
 from repro.models import lm
 
 _JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -53,12 +59,18 @@ def run(arch: str = "smollm_135m", *, batch: int = 4, prompt_len: int = 16,
     params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
     max_len = prompt_len + gen + 8
     prompts = _workload(cfg, requests, prompt_len, shared_prefix)
-    scenarios = [("dense", 1, False)] + [("paged", mb, True)
-                                         for mb in microbatch_settings]
+    # the chaos row prices fault tolerance: same workload under a seeded
+    # all-classes FaultPlan — throughput dips buy retries/recoveries,
+    # and every SURVIVOR must still be bit-identical
+    chaos_plan = ("seed=11,raise:0.1,nan:0.05,drop:0.05,"
+                  "stall:0.03:delay_s=0.001,pressure:0.1:pages=2")
+    scenarios = ([("dense", 1, False, None)]
+                 + [("paged", mb, True, None) for mb in microbatch_settings]
+                 + [("chaos", max(microbatch_settings), True, chaos_plan)])
     rows = []
-    for layout, mb, paged in scenarios:
+    for layout, mb, paged, inject in scenarios:
         server = Server(cfg, params, batch=batch, max_len=max_len,
-                        microbatches=mb, paged=paged)
+                        microbatches=mb, paged=paged, inject=inject)
         pending = [Request(i, p, gen, arrival=i * stagger)
                    for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
@@ -66,6 +78,8 @@ def run(arch: str = "smollm_135m", *, batch: int = 4, prompt_len: int = 16,
         dt = time.perf_counter() - t0
         if check:
             for r in done:
+                if r.finish_reason not in SURVIVOR_REASONS:
+                    continue               # chaos casualties carry reasons
                 ref = solo_reference(cfg, params, r.prompt, gen, max_len)
                 assert r.out == ref, (r.rid, r.out, ref)
         st = server.stats()
@@ -88,11 +102,31 @@ def run(arch: str = "smollm_135m", *, batch: int = 4, prompt_len: int = 16,
             row.update({k: st[k] for k in
                         ("prefix_hits", "hit_rate", "pages_in_use",
                          "peak_pages_in_use", "page_size", "pool_pages")})
+        if inject:
+            survivors = sum(r.finish_reason in SURVIVOR_REASONS
+                            for r in done)
+            row.update({
+                "inject": inject,
+                "survivors": survivors,
+                "faults_injected": st["faults_injected"],
+                "faults_detected": st["faults_detected"],
+                "retries": st["retries"],
+                "recoveries": st["recoveries"],
+                "recovered_requests": st["recovered_requests"],
+                "failed_requests": st["failed_requests"],
+                "shed": st["shed"],
+                "health": st["health"],
+            })
         rows.append(row)
         if verbose:
             extra = (f", hit_rate={row['hit_rate']}, "
                      f"skipped={row['prefill_tokens_skipped']} prefill tok"
                      if paged else "")
+            if inject:
+                extra += (f", {row['faults_detected']} faults -> "
+                          f"{row['retries']} retries/"
+                          f"{row['recoveries']} recoveries, "
+                          f"{row['survivors']}/{len(done)} survived")
             print(f"serve {layout} mb={mb}: {total} tok in {row['wall_s']}s"
                   f" ({row['tok_per_s']} tok/s, p50 {row['tick_p50_ms']}ms"
                   f", p99 {row['tick_p99_ms']}ms{extra})")

@@ -24,6 +24,11 @@ claim is a control-plane bug:
     with the live ``pool.refs`` array (the abstract model and the
     implementation no longer describe the same machine).
 
+Annotation-only ``("event", tag, info)`` entries (``PagePool.note`` —
+e.g. the server's ``fault_recovery`` markers) carry no refcount
+semantics and are accepted and skipped, so a fault-tolerant run's trace
+still verifies clean.
+
 ``check_serving_trace`` is pure over the trace, so tests can feed
 hand-built traces with injected violations; ``verify_pool`` wraps it for
 a live pool + tree + slot tables (what ``Server.verify()`` calls).
@@ -113,6 +118,10 @@ def check_serving_trace(
                     refs(owner)[p] -= 1
                 if slot_refs[p] + tree_refs[p] == 0:
                     free.add(p)
+        elif kind == "event":
+            # annotation-only entries (PagePool.note): fault-recovery
+            # markers and friends — no refcount semantics, skipped
+            continue
         else:
             diags.append(_err(
                 "SRV000",

@@ -1,5 +1,5 @@
 """Serving launcher: continuous batching over a paged KV-cache pool with
-prefix-tree reuse.
+prefix-tree reuse, hardened against accelerator faults.
 
 Requests are admitted into free cache slots and decoded in lockstep (one
 fused ``decode_step`` per tick for the whole batch) — the standard TPU
@@ -23,6 +23,20 @@ version:
     single-request reference decode (``solo_reference``, which runs on
     the *dense* cache layout, so ``--check`` is a cross-layout oracle).
 
+**Fault tolerance** (see "Failure modes and recovery" in
+``docs/serving.md``): every prefill/decode dispatch runs under bounded
+retry with exponential backoff; NaN/Inf logits retire only the poisoned
+slot; a faulted request's slot is quarantined and the request re-enters
+admission, where the prefix tree lets it re-prefill from its cached
+prompt pages instead of from scratch; per-request wall-clock deadlines
+and a deferral cap bound how long a request can wait on a dry pool; and
+a health state machine (``healthy -> degraded -> shedding``) sheds new
+admissions with an explicit reason under sustained fault or pool
+pressure instead of deferring silently.  ``--inject`` arms a seeded
+:class:`~repro.runtime.faults.FaultPlan` so every one of those paths can
+be exercised deterministically — with ``--check`` still holding every
+*surviving* request bit-identical to its solo reference.
+
 ``microbatches > 1`` splits the slot pool into shards, each with its own
 cache/pool/tree, and decodes them through the asynchronous pipeline: every
 active shard's decode step is dispatched fire-and-forget on a
@@ -34,7 +48,8 @@ model.  Prefixes are shared within a shard (pools are per-shard arrays).
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_135m \
       --reduced --batch 4 --prompt-len 16 --gen 32 --microbatches 2 \
-      --stagger 2 --vary-prompts --shared-prefix 9 --check
+      --stagger 2 --vary-prompts --shared-prefix 9 --check \
+      --inject "seed=3,raise:0.05,drop:0.05,nan:0.05,stall:0.05,pressure:0.1"
 """
 from __future__ import annotations
 
@@ -50,14 +65,21 @@ import repro.configs as configs
 from repro.configs.base import reduce as reduce_cfg
 from repro.models import lm
 from repro.runtime.executor import DeviceQueue
+from repro.runtime.faults import FaultError, FaultPlan
+from repro.runtime.supervisor import StragglerMonitor
 from repro.serving import PagePool, PrefixTree
 
-__all__ = ["Server", "Request", "solo_reference", "drain", "main"]
+__all__ = ["Server", "ServePolicy", "Request", "solo_reference", "drain",
+           "main"]
 
 # families whose serving cache supports the paged layout (token-prompt
 # attention models); recurrent families keep dense/recurrent state and
 # opt out via the seq_lens keep-mask path
 _PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+# terminal finish reasons that mean "served to completion" — only these
+# requests are held to the --check bit-equivalence oracle
+SURVIVOR_REASONS = ("length", "eos")
 
 
 @dataclasses.dataclass
@@ -66,12 +88,44 @@ class Request:
     prompt: np.ndarray           # (prompt_len,) int32
     max_new: int
     arrival: int = 0             # tick at which the request becomes visible
+    deadline_s: float | None = None   # wall-clock budget (None = policy's)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # why the request left the server: "length" | "eos" (survivors),
+    # "deadline", "shed:<reason>", "rejected:<reason>", "failed:<reason>"
+    finish_reason: str | None = None
     # filled in by paged admission: tokens actually prefilled (the
     # unshared tail) and tokens served from the prefix cache
     prefill_len: int = -1
     shared_len: int = 0
+    # fault-tolerance bookkeeping
+    deferrals: int = 0           # pool-dry admission deferrals so far
+    recoveries: int = 0          # quarantine/re-prefill round trips
+    t_seen: float | None = None  # wall clock of first admission attempt
+
+
+@dataclasses.dataclass
+class ServePolicy:
+    """Fault-tolerance knobs for :class:`Server` (see docs/serving.md).
+
+    ``max_retries`` bounds per-dispatch retry (first retry waits
+    ``backoff_s``, doubling each attempt); ``max_recoveries`` bounds how
+    often a request may be quarantined and re-prefilled before it is
+    retired as failed; ``defer_cap`` bounds pool-dry admission deferrals
+    (the all-pages-pinned livelock guard); ``deadline_s`` is the default
+    per-request wall-clock budget (None = unbounded).  The health state
+    machine trips to ``shedding`` when the last ``health_window`` ticks
+    saw ``shed_faults`` fault events or ``shed_deferrals`` deferrals.
+    """
+    max_retries: int = 3
+    backoff_s: float = 0.005
+    deadline_s: float | None = None
+    defer_cap: int = 16
+    max_recoveries: int = 3
+    quarantine_ticks: int = 2
+    health_window: int = 16
+    shed_faults: int = 4
+    shed_deferrals: int = 8
 
 
 def _bucket(n: int, floor: int = 8) -> int:
@@ -125,19 +179,27 @@ def drain(server: "Server", pending: list[Request], *,
     """Drive ``server`` until every request retires: admit requests as
     they arrive (``Request.arrival`` in ticks) and slots free up, tick,
     collect retirees.  The one canonical serving loop — main(), the
-    serving benchmark, and the tests all drain through here."""
+    serving benchmark, and the tests all drain through here.
+
+    When ``max_iters`` is exceeded the error names exactly what is
+    stuck — which requests, in which slots/shards, how far along — plus
+    a ``stats()`` snapshot, so a hung soak run is diagnosable from the
+    traceback alone.
+    """
     pending = list(pending)
     done: list[Request] = []
     inflight: list[Request] = []
     clock = 0
     while pending or inflight:
         if max_iters is not None and clock >= max_iters:
-            raise RuntimeError(
-                f"server did not converge in {max_iters} iterations")
+            server.quiesce()
+            raise RuntimeError(_stuck_report(server, pending, inflight,
+                                             max_iters))
         while pending and pending[0].arrival <= clock \
                 and server.admit(pending[0]):
             r = pending.pop(0)
-            # a request can finish at admission (max_new == 1 / EOS)
+            # a request can finish at admission (max_new == 1 / EOS /
+            # shed / rejection)
             (done if r.done else inflight).append(r)
         server.tick()
         clock += 1
@@ -145,9 +207,33 @@ def drain(server: "Server", pending: list[Request], *,
             if r.done:
                 inflight.remove(r)
                 done.append(r)
+    server.quiesce()
     if getattr(server, "verify_enabled", False):
         server.verify()          # raises AnalysisError on any violation
     return done
+
+
+def _stuck_report(server: "Server", pending: list[Request],
+                  inflight: list[Request], max_iters: int) -> str:
+    """Human-readable account of a non-converging drain."""
+    requeue = list(getattr(server, "requeue", ()))
+    stuck = []
+    for r in inflight:
+        slot = next((i for i, s in enumerate(server.slots) if s is r),
+                    None)
+        if slot is not None:
+            where = f"slot {slot} (shard {slot // server.mb})"
+        elif r in requeue:
+            where = f"queued for re-admission ({r.recoveries} recoveries)"
+        else:
+            where = "awaiting a slot"
+        stuck.append(f"rid {r.rid}: {len(r.out)}/{r.max_new} tokens, "
+                     f"{where}")
+    return (f"server did not converge in {max_iters} iterations\n"
+            f"  in flight: {'; '.join(stuck) or 'none'}\n"
+            f"  never admitted: "
+            f"{[r.rid for r in pending] or 'none'}\n"
+            f"  stats: {server.stats()}")
 
 
 class Server:
@@ -164,12 +250,25 @@ class Server:
 
     ``paged=False`` (or a non-attention family) falls back to the dense
     per-slot layout of PR 2 — same admission/tick flow, no sharing.
+
+    Fault tolerance (``policy``, a :class:`ServePolicy`): dispatches
+    retry with exponential backoff on :class:`~repro.runtime.faults.
+    FaultError`; poisoned (NaN/Inf) logits retire only the affected
+    slot; faulted requests are recovered through quarantine +
+    re-admission, where the prefix tree supplies their already-computed
+    prompt pages; deadlines and a deferral cap bound every wait; and the
+    ``healthy -> degraded -> shedding`` state machine refuses new
+    admissions with an explicit reason under sustained pressure.
+    ``inject`` (a :class:`~repro.runtime.faults.FaultPlan` or spec
+    string) arms deterministic chaos on the prefill/decode/pool sites.
     """
 
     def __init__(self, cfg, params, *, batch: int, max_len: int,
                  microbatches: int = 1, eos_id: int | None = None,
                  paged: bool | None = None, page_size: int = 0,
-                 pool_pages: int = 0, verify: bool = False):
+                 pool_pages: int = 0, verify: bool = False,
+                 policy: ServePolicy | None = None,
+                 inject: FaultPlan | str | None = None):
         if microbatches < 1:
             raise ValueError(f"microbatches must be >= 1, got {microbatches}")
         if batch % microbatches:
@@ -180,6 +279,9 @@ class Server:
         self.microbatches = microbatches
         self.eos_id = eos_id
         self.mb = batch // microbatches
+        self.policy = policy or ServePolicy()
+        self.inject = (FaultPlan.parse(inject) if isinstance(inject, str)
+                       else inject)
         if paged is None:
             paged = cfg.family in _PAGED_FAMILIES
         elif paged and cfg.family not in _PAGED_FAMILIES:
@@ -221,8 +323,9 @@ class Server:
         self._install = jax.jit(
             lambda c, s, t, n: lm.install_pages(c, s, t, n, cfg),
             donate_argnums=(0,))
-        self.queue = DeviceQueue("decode")
-        self.ticks = 0
+        self.queue = DeviceQueue("decode", injector=self.inject)
+        self.ticks = 0               # ticks that dispatched a decode
+        self.clock = 0               # every tick() call (drives timers)
         # observability: admission + prefix-cache counters, tick latencies
         self.admitted = 0
         self.prefix_hits = 0
@@ -231,6 +334,112 @@ class Server:
         self.deferred_admissions = 0
         self.peak_pages_in_use = 0
         self.tick_wall_s: list[float] = []
+        self.straggler = StragglerMonitor()
+        # fault tolerance state
+        self.health = "healthy"      # healthy | degraded | shedding
+        self._shed_reason = ""
+        self.requeue: list[Request] = []         # awaiting re-admission
+        self.quarantined: dict[int, int] = {}    # slot -> free at clock
+        self._pressure_holds: list[tuple[int, int, list[int]]] = []
+        self._fault_window: list[int] = []       # per-tick fault events
+        self._defer_window: list[int] = []       # per-tick deferrals
+        self._tick_faults = 0
+        self._tick_defers = 0
+        # fault/recovery counters (stats())
+        self.faults_detected = 0
+        self.retries = 0
+        self.recoveries = 0
+        self.recovered = 0
+        self.failed = 0
+        self.shed = 0
+        self.rejected = 0
+        self.deadline_retired = 0
+        self.slots_quarantined = 0
+
+    # --------------------------------------------------- fault plumbing
+    def _submit(self, site: str, fn, *args):
+        """Queue submit under the retry policy: an injected (or any
+        :class:`FaultError`) dispatch failure is retried up to
+        ``max_retries`` times with exponential backoff.  Faults fire
+        *before* the kernel runs, so device state is untouched and the
+        identical submit is safe to replay.  Returns None once retries
+        are exhausted — the caller routes the affected request(s) into
+        recovery."""
+        delay = self.policy.backoff_s
+        for attempt in range(self.policy.max_retries + 1):
+            try:
+                return self.queue.submit(fn, *args, site=site)
+            except FaultError:
+                self.faults_detected += 1
+                self._tick_faults += 1
+                if attempt == self.policy.max_retries:
+                    return None
+                self.retries += 1
+                time.sleep(delay)
+                delay *= 2
+        return None
+
+    def _quarantine(self, slot: int):
+        self.quarantined[slot] = self.clock + self.policy.quarantine_ticks
+        self.slots_quarantined += 1
+
+    def _is_quarantined(self, slot: int) -> bool:
+        until = self.quarantined.get(slot)
+        if until is None:
+            return False
+        if self.clock >= until:
+            del self.quarantined[slot]
+            return False
+        return True
+
+    def _recover(self, req: Request, slot: int, reason: str):
+        """Pull ``req`` out of its (possibly poisoned) slot and route it
+        back through admission.  The slot is quarantined for
+        ``quarantine_ticks``; the request's pages are released (its
+        prompt's full pages usually survive in the prefix tree, so the
+        re-prefill starts from the cached prefix rather than from
+        scratch); generation restarts so the recovered decode is exactly
+        the deterministic greedy sequence the reference produces."""
+        self.faults_detected += 1
+        self._tick_faults += 1
+        shard = slot // self.mb
+        if self.paged and self.pools[shard].trace is not None:
+            self.pools[shard].note("fault_recovery", rid=req.rid,
+                                   slot=slot, reason=reason)
+        if self.slots[slot] is req:
+            self.slots[slot] = None
+        self._release_slot(slot)
+        self._quarantine(slot)
+        req.out = []
+        req.prefill_len, req.shared_len = -1, 0
+        req.recoveries += 1
+        self.recoveries += 1
+        if req.recoveries > self.policy.max_recoveries:
+            req.done = True
+            req.finish_reason = f"failed:{reason}"
+            self.failed += 1
+        else:
+            self.requeue.append(req)
+
+    def _effective_deadline(self, req: Request) -> float | None:
+        return (req.deadline_s if req.deadline_s is not None
+                else self.policy.deadline_s)
+
+    def _update_health(self):
+        w = self.policy.health_window
+        self._fault_window.append(self._tick_faults)
+        self._defer_window.append(self._tick_defers)
+        del self._fault_window[:-w], self._defer_window[:-w]
+        self._tick_faults = self._tick_defers = 0
+        faults, defers = sum(self._fault_window), sum(self._defer_window)
+        if faults >= self.policy.shed_faults:
+            self.health, self._shed_reason = "shedding", "fault_rate"
+        elif defers >= self.policy.shed_deferrals:
+            self.health, self._shed_reason = "shedding", "pool_pressure"
+        elif faults or defers or self.quarantined:
+            self.health, self._shed_reason = "degraded", ""
+        else:
+            self.health, self._shed_reason = "healthy", ""
 
     # ------------------------------------------------------------- admit
     def admit(self, req: Request) -> bool:
@@ -245,7 +454,13 @@ class Server:
         of concurrent requests are masked by ``seq_lens``).  Afterwards
         the prompt's full pages are inserted into the tree so the next
         request can start from them.  Returns False when no slot is free
-        or the shard's pool cannot currently hold the request."""
+        or the shard's pool cannot currently hold the request.
+
+        Returning True with ``req.done`` set means the request was
+        *consumed* without being served: shed (health state), rejected
+        (deferral cap / deadline expired while waiting), or finished at
+        admission (max_new == 1 / EOS).  ``req.finish_reason`` says
+        which."""
         need = len(req.prompt) + req.max_new - 1
         if need > self.max_len:
             raise ValueError(
@@ -253,8 +468,30 @@ class Server:
                 f"{req.max_new} generated tokens need {need} cache "
                 f"entries > max_len {self.max_len} — overflowing KV "
                 f"writes would be silently dropped")
+        now = time.monotonic()
+        if req.t_seen is None:
+            req.t_seen = now
+        deadline = self._effective_deadline(req)
+        if deadline is not None and now - req.t_seen > deadline:
+            # expired while waiting for a slot / pool space
+            req.done = True
+            req.finish_reason = "rejected:deadline"
+            self.rejected += 1
+            return True
+        if req.deferrals > self.policy.defer_cap:
+            # the all-pages-pinned livelock guard: stop re-deferring
+            req.done = True
+            req.finish_reason = "rejected:defer_cap"
+            self.rejected += 1
+            return True
+        if self.health == "shedding" and req.recoveries == 0:
+            # shed NEW work loudly; recoveries keep their promise
+            req.done = True
+            req.finish_reason = f"shed:{self._shed_reason}"
+            self.shed += 1
+            return True
         for i, s in enumerate(self.slots):
-            if s is not None:
+            if s is not None or self._is_quarantined(i):
                 continue
             shard, row = divmod(i, self.mb)
             if self.paged:
@@ -268,9 +505,9 @@ class Server:
                 self._reset, self.caches[shard], jnp.int32(row))
             p = len(req.prompt)
             req.prefill_len, req.shared_len = p, 0
-            self._dispatch_prefill(req, shard, row, req.prompt)
-            self.admitted += 1
-            self.prefill_tokens += p
+            if self._dispatch_prefill(req, shard, row, req.prompt):
+                self.admitted += 1
+                self.prefill_tokens += p
             return True
         return False
 
@@ -292,6 +529,8 @@ class Server:
             # admission (a later retirement will release pages)
             pool.release(shared)
             self.deferred_admissions += 1
+            self._tick_defers += 1
+            req.deferrals += 1
             return False
         table = shared + priv
         self.slots[slot] = req
@@ -301,36 +540,56 @@ class Server:
         self.caches[shard] = self.queue.submit(
             self._install, self.caches[shard], jnp.int32(row),
             jnp.asarray(row_table), jnp.int32(shared_len))
-        # cache the prompt's full pages for future admissions BEFORE the
-        # prefill can retire the request (max_new == 1) and release its
-        # slot references — the tree's retain must land first.  Content-
-        # wise this is safe: the pages' K/V writes are queued ahead of
-        # any later admission's reads by JAX dispatch order.
-        tree.insert(req.prompt, table)
         tail = req.prompt[shared_len:]
         req.prefill_len, req.shared_len = len(tail), shared_len
-        self._dispatch_prefill(req, shard, row, tail, slot_idx=slot)
-        self.admitted += 1
-        self.prefix_hits += shared_len > 0
-        self.prefill_tokens += len(tail)
-        self.prefill_tokens_skipped += shared_len
-        self.peak_pages_in_use = max(self.peak_pages_in_use,
-                                     self.pages_in_use)
+        # retirement at admission (max_new == 1) must not release the
+        # slot's pages before the tree has retained the prompt's full
+        # pages — defer it past insert().  A FAILED prefill must never
+        # reach insert(): its pages were never written, and caching them
+        # would serve garbage K/V to every future match.  Content-wise
+        # the insert is safe: the pages' K/V writes are queued ahead of
+        # any later admission's reads by JAX dispatch order.
+        ok = self._dispatch_prefill(req, shard, row, tail, slot_idx=slot,
+                                    defer_retire=True)
+        if ok:
+            tree.insert(req.prompt, table)
+            self.admitted += 1
+            self.prefix_hits += shared_len > 0
+            self.prefill_tokens += len(tail)
+            self.prefill_tokens_skipped += shared_len
+            self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                         self.pages_in_use)
+            if req.done:             # finished at admission
+                self.slots[slot] = None
+                self._release_slot(slot)
         return True
 
     def _dispatch_prefill(self, req: Request, shard: int, row: int,
-                          tail, slot_idx: int | None = None):
+                          tail, slot_idx: int | None = None,
+                          defer_retire: bool = False) -> bool:
         p = len(tail)
         toks = np.zeros((self.mb, _bucket(p)), np.int32)
         toks[row, :p] = tail
         sl = np.zeros((self.mb,), np.int32)
         sl[row] = p
-        logits, self.caches[shard] = self.queue.submit(
-            self._prefill, self.params, jnp.asarray(toks),
-            self.caches[shard], jnp.asarray(sl))
-        # the prefill's final logits predict the first new token
         idx = slot_idx if slot_idx is not None else shard * self.mb + row
-        self._append(req, idx, int(jnp.argmax(logits[row])))
+        out = self._submit("prefill", self._prefill, self.params,
+                           jnp.asarray(toks), self.caches[shard],
+                           jnp.asarray(sl))
+        if out is None:              # retries exhausted
+            self._recover(req, idx, "prefill_failed")
+            return False
+        logits, self.caches[shard] = out
+        row_logits = logits[row]
+        if not bool(jnp.isfinite(row_logits).all()):
+            # poisoned prefill: only this request is damaged — the cache
+            # writes themselves landed, but its seed token is garbage
+            self._recover(req, idx, "nan_logits")
+            return False
+        # the prefill's final logits predict the first new token
+        self._append(req, idx, int(jnp.argmax(row_logits)),
+                     defer_retire=defer_retire)
+        return True
 
     # ---------------------------------------------------------- retire
     def _release_slot(self, slot: int):
@@ -342,13 +601,83 @@ class Server:
             self.pools[slot // self.mb].release(pages)
             self.slot_pages[slot] = None
 
-    def _append(self, req: Request, slot: int, tok: int):
+    def _append(self, req: Request, slot: int, tok: int, *,
+                defer_retire: bool = False):
         req.out.append(tok)
-        if (self.eos_id is not None and tok == self.eos_id) \
-                or len(req.out) >= req.max_new:
-            req.done = True
-            self.slots[slot] = None      # retire -> slot reusable
-            self._release_slot(slot)
+        if self.eos_id is not None and tok == self.eos_id:
+            req.done, req.finish_reason = True, "eos"
+        elif len(req.out) >= req.max_new:
+            req.done, req.finish_reason = True, "length"
+        if req.done:
+            if req.recoveries:
+                self.recovered += 1      # survived at least one fault
+            if not defer_retire:
+                self.slots[slot] = None      # retire -> slot reusable
+                self._release_slot(slot)
+
+    def _retire(self, req: Request, slot: int, reason: str):
+        """Forcibly retire an active request with an explicit reason
+        (deadline enforcement); its partial output is kept."""
+        req.done = True
+        req.finish_reason = reason
+        self.slots[slot] = None
+        self._release_slot(slot)
+
+    # ----------------------------------------------------- tick helpers
+    def _expire_pressure(self, *, all_holds: bool = False):
+        for until, shard, pages in list(self._pressure_holds):
+            if all_holds or until <= self.clock:
+                self.pools[shard].release(pages)
+                self._pressure_holds.remove((until, shard, pages))
+
+    def _inject_pressure(self):
+        """Fire ``pressure`` faults: pin free pool pages for a few ticks
+        so admissions see a dry pool without any real load behind it."""
+        if self.inject is None or not self.paged:
+            return
+        for shard in range(self.microbatches):
+            spec = self.inject.draw("pool")
+            if spec is None:
+                continue
+            take = min(spec.pages, self.pools[shard].free_pages)
+            pages = self.pools[shard].alloc(take) if take > 0 else None
+            if pages:
+                self._pressure_holds.append(
+                    (self.clock + spec.ticks, shard, pages))
+                self._tick_faults += 1
+
+    def _readmit_recoveries(self):
+        for req in list(self.requeue):
+            if req.done:             # expired while queued
+                self.requeue.remove(req)
+                continue
+            if self.admit(req):
+                self.requeue.remove(req)
+
+    def _deadline_sweep(self):
+        now = time.monotonic()
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            deadline = self._effective_deadline(req)
+            if deadline is not None and req.t_seen is not None \
+                    and now - req.t_seen > deadline:
+                self._retire(req, i, "deadline")
+                self.deadline_retired += 1
+        for req in list(self.requeue):
+            deadline = self._effective_deadline(req)
+            if deadline is not None and req.t_seen is not None \
+                    and now - req.t_seen > deadline:
+                req.done = True
+                req.finish_reason = "deadline"
+                self.deadline_retired += 1
+                self.requeue.remove(req)
+
+    def quiesce(self):
+        """Release injected pressure holds (end of a drive loop) so the
+        pool's end state reflects only real holders — drain() calls this
+        before ``verify()``."""
+        self._expire_pressure(all_holds=True)
 
     # -------------------------------------------------------------- tick
     def tick(self) -> bool:
@@ -357,8 +686,20 @@ class Server:
         All active shards are dispatched before any result is read — the
         dependency-only barrier is the argmax read at the end.  Idle slots
         inside an active shard advance nothing (``seq_lens=0``).
+
+        Fault-tolerance work rides the same clock: expired pressure
+        holds are released, recovered requests re-enter admission,
+        deadlines are enforced, a shard whose dispatch fails after
+        retries routes its active requests into recovery, poisoned
+        (non-finite) logits retire only their own slot, and the health
+        state machine is advanced from the tick's fault/deferral counts.
         """
         t0 = time.perf_counter()
+        self.clock += 1
+        self._expire_pressure()
+        self._inject_pressure()
+        self._readmit_recoveries()
+        self._deadline_sweep()
         inflight: list[tuple[int, jax.Array]] = []
         for shard in range(self.microbatches):
             toks = np.zeros((self.mb, 1), np.int32)
@@ -371,23 +712,43 @@ class Server:
                 sl[j] = 1
             if not sl.any():
                 continue                     # idle shard: no dispatch
-            logits, self.caches[shard] = self.queue.submit(
-                self._decode, self.params, jnp.asarray(toks),
-                self.caches[shard], jnp.asarray(sl))
+            out = self._submit("decode", self._decode, self.params,
+                               jnp.asarray(toks), self.caches[shard],
+                               jnp.asarray(sl))
+            if out is None:
+                # the whole shard's dispatch failed after retries: every
+                # active request in it goes through recovery (the cache
+                # was never touched — faults fire before dispatch)
+                for j in range(self.mb):
+                    i = shard * self.mb + j
+                    req = self.slots[i]
+                    if req is not None and not req.done:
+                        self._recover(req, i, "decode_failed")
+                continue
+            logits, self.caches[shard] = out
             inflight.append((shard, logits))
-        if not inflight:
-            return False
-        for shard, logits in inflight:       # sync point: token readback
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-            for j in range(self.mb):
-                i = shard * self.mb + j
-                req = self.slots[i]
-                if req is None or req.done:
-                    continue
-                self._append(req, i, int(nxt[j]))
-        self.ticks += 1
-        self.tick_wall_s.append(time.perf_counter() - t0)
-        return True
+        if inflight:
+            for shard, logits in inflight:   # sync point: token readback
+                lg = logits[:, 0]
+                finite = np.asarray(jnp.isfinite(lg).all(axis=-1))
+                nxt = np.asarray(jnp.argmax(lg, axis=-1))
+                for j in range(self.mb):
+                    i = shard * self.mb + j
+                    req = self.slots[i]
+                    if req is None or req.done:
+                        continue
+                    if not finite[j]:
+                        # poisoned row: retire ONLY this slot — the
+                        # neighbours' logits and cache rows are intact
+                        self._recover(req, i, "nan_logits")
+                        continue
+                    self._append(req, i, int(nxt[j]))
+            self.ticks += 1
+            dt = time.perf_counter() - t0
+            self.tick_wall_s.append(dt)
+            self.straggler.observe(self.clock, dt)
+        self._update_health()
+        return bool(inflight)
 
     # ------------------------------------------------------------ verify
     def verify(self):
@@ -405,6 +766,8 @@ class Server:
             live = [self.slot_pages[i]
                     for i in range(shard * self.mb, (shard + 1) * self.mb)
                     if self.slot_pages[i] is not None]
+            live += [pages for _, sh, pages in self._pressure_holds
+                     if sh == shard]
             out.extend(verify_pool(pool, tree, live_slot_pages=live),
                        passname="serving")
         return out.raise_on_error()
@@ -416,7 +779,8 @@ class Server:
 
     def stats(self) -> dict:
         """Serving counters for benchmarks/tests: prefix-cache hit rate,
-        prefill work skipped, pool occupancy, tick latency percentiles."""
+        prefill work skipped, pool occupancy, tick latency percentiles,
+        and the fault/recovery/shed ledger."""
         ticks = np.asarray(self.tick_wall_s or [0.0])
         out = {
             "admitted": self.admitted,
@@ -426,6 +790,20 @@ class Server:
             "prefill_tokens": self.prefill_tokens,
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
             "paged": self.paged,
+            # fault tolerance ledger
+            "health": self.health,
+            "faults_injected": dict(self.inject.injected)
+            if self.inject is not None else {},
+            "faults_detected": self.faults_detected,
+            "retries": self.retries,
+            "recoveries": self.recoveries,
+            "recovered_requests": self.recovered,
+            "failed_requests": self.failed,
+            "shed": self.shed,
+            "rejected": self.rejected,
+            "deadline_retired": self.deadline_retired,
+            "slots_quarantined": self.slots_quarantined,
+            "straggler_ticks": len(self.straggler.flagged),
         }
         if self.paged:
             out.update({
@@ -470,14 +848,23 @@ def main(argv=None):
                     help="page-pool capacity per shard (0 = 2x the dense-"
                          "equivalent slot footprint)")
     ap.add_argument("--check", action="store_true",
-                    help="assert every request's greedy tokens are "
-                         "bit-identical to its single-request reference "
-                         "(decoded through the DENSE layout: a cross-"
-                         "layout oracle)")
+                    help="assert every surviving request's greedy tokens "
+                         "are bit-identical to its single-request "
+                         "reference (decoded through the DENSE layout: a "
+                         "cross-layout oracle)")
     ap.add_argument("--verify", action="store_true",
                     help="record page-pool operation traces and run the "
                          "serving-invariant checker (repro.analysis) "
                          "over them when the server drains")
+    ap.add_argument("--inject", type=str, default=None,
+                    help="arm a seeded fault plan, e.g. "
+                         "'seed=3,raise:0.05,drop:0.05,nan:0.05,"
+                         "stall:0.05:delay_s=0.002,pressure:0.1:pages=2'"
+                         " (see repro.runtime.faults)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request wall-clock deadline")
+    ap.add_argument("--defer-cap", type=int, default=None,
+                    help="pool-dry deferrals before a request is rejected")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -487,11 +874,16 @@ def main(argv=None):
     # per-slot positions: the cache is sized by ONE sequence (prompt +
     # generation), no matter how many admission waves reuse the slot.
     max_len = args.prompt_len + args.gen + 8
+    policy = ServePolicy()
+    if args.deadline_s is not None:
+        policy.deadline_s = args.deadline_s
+    if args.defer_cap is not None:
+        policy.defer_cap = args.defer_cap
     server = Server(cfg, params, batch=args.batch, max_len=max_len,
                     microbatches=args.microbatches, eos_id=args.eos_id,
                     paged=False if args.dense else None,
                     page_size=args.page_size, pool_pages=args.pool_pages,
-                    verify=args.verify)
+                    verify=args.verify, policy=policy, inject=args.inject)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size,
@@ -510,26 +902,39 @@ def main(argv=None):
     done = drain(server, pending)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in done)
+    survivors = [r for r in done if r.finish_reason in SURVIVOR_REASONS]
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
           f"{server.ticks} decode ticks, "
           f"{server.queue.dispatched} queue dispatches incl. prefill)")
     print(f"stats: {server.stats()}")
+    if args.inject:
+        casualties = [(r.rid, r.finish_reason) for r in done
+                      if r.finish_reason not in SURVIVOR_REASONS]
+        print(f"chaos: plan {server.inject!r} injected "
+              f"{server.inject.injected}; {len(survivors)} survivors, "
+              f"{server.recovered} recovered after faults, "
+              f"retired with reasons: {casualties or 'none'}")
+        assert sum(server.inject.injected.values()) > 0, (
+            "fault plan armed but nothing fired — raise the "
+            "probabilities or the workload size")
+        for r in done:      # every retirement carries an explicit reason
+            assert r.finish_reason, f"request {r.rid} retired silently"
     if args.verify and server.paged:
         n_ops = sum(len(p.trace or ()) for p in server.pools)
         print(f"verify: serving-invariant checker passed over {n_ops} "
               f"traced pool operation(s)")
-    if args.eos_id is None:
+    if args.eos_id is None and not args.inject and args.deadline_s is None:
         assert all(len(r.out) == r.max_new for r in done)
     if args.check:
-        for r in done:
+        for r in survivors:
             ref = solo_reference(cfg, params, r.prompt, r.max_new, max_len,
                                  eos_id=args.eos_id)
             assert r.out == ref, (
                 f"request {r.rid}: served tokens diverge from the "
                 f"single-request reference\n  got {r.out}\n  ref {ref}")
-        print(f"check: all {len(done)} requests bit-identical to their "
-              f"solo references")
+        print(f"check: all {len(survivors)} surviving requests "
+              f"bit-identical to their solo references")
         if args.shared_prefix and not args.dense:
             skipped = server.prefill_tokens_skipped
             assert skipped > 0, (

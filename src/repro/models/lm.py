@@ -624,7 +624,13 @@ def reset_slot(caches, slot, cfg: ArchConfig):
     slots or retained by the prefix tree.  Returning them to the free
     list (and decrementing prefix-tree refcounts) is the **host-side
     server's** job at retirement (``PagePool.release``); a server that
-    resets paged slots without releasing their pages leaks the pool."""
+    resets paged slots without releasing their pages leaks the pool.
+
+    Either way the reset touches ONLY row ``slot`` — which is what makes
+    it the fault-recovery primitive too: quarantining one poisoned slot
+    and re-admitting its request (re-prefilling from prefix-tree cached
+    pages) cannot perturb any neighbour's cache row, so survivors stay
+    bit-identical under recovery (``tests/test_faults.py``)."""
     fam = cfg.family
 
     def attn_reset(c):
@@ -660,7 +666,12 @@ def install_pages(caches, slot, table_row, n_tokens, cfg: ArchConfig):
     Page ids are layer-uniform — every layer's pool has the same shape,
     so one host-side allocation covers the whole stack and the same table
     row is installed at every layer (exactly like ``len``).  See
-    ``transformer.install_kv_pages`` for the single-layer invariants."""
+    ``transformer.install_kv_pages`` for the single-layer invariants.
+
+    Re-admission after a fault recovery is the same call: the recovered
+    request's table starts from whatever full prompt pages the prefix
+    tree still caches (``n_tokens`` = the shared prefix), so recovery
+    re-prefills only the prompt tail instead of starting cold."""
     fam = cfg.family
 
     def one(c):

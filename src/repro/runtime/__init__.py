@@ -1,5 +1,12 @@
-from repro.runtime.executor import AsyncExecutor, DeviceQueue
+from repro.runtime.executor import (
+    AsyncExecutor, DeviceQueue, ExecutorTaskError,
+)
+from repro.runtime.faults import (
+    FaultError, FaultPlan, FaultSpec, InjectedKernelError, TaskDropped,
+)
 from repro.runtime.supervisor import StragglerMonitor, Supervisor, TrainLoop
 
-__all__ = ["AsyncExecutor", "DeviceQueue",
+__all__ = ["AsyncExecutor", "DeviceQueue", "ExecutorTaskError",
+           "FaultError", "FaultPlan", "FaultSpec", "InjectedKernelError",
+           "TaskDropped",
            "StragglerMonitor", "Supervisor", "TrainLoop"]

@@ -28,6 +28,7 @@ it (Fig. 8's measured column).
 from __future__ import annotations
 
 import collections
+import time
 from typing import Callable
 
 import jax
@@ -38,8 +39,21 @@ from repro.core.graph import Graph
 from repro.core.schedule import (
     ScheduleReport, StageTask, donation_argnums, stage_consumers,
 )
+from repro.runtime.faults import FaultPlan, InjectedKernelError, TaskDropped
 
-__all__ = ["DeviceQueue", "AsyncExecutor"]
+__all__ = ["DeviceQueue", "AsyncExecutor", "ExecutorTaskError"]
+
+
+class ExecutorTaskError(RuntimeError):
+    """A queue/executor task failed, annotated with *where*: the stage,
+    tile, and accelerator whose dispatch raised — so a failure surfaces
+    at the ``run()``/``drain()`` boundary with its site attached instead
+    of as a detached traceback at some arbitrary later dispatch."""
+
+    def __init__(self, msg: str, *, stage: str | None = None,
+                 tile: int | None = None, device: str | None = None):
+        super().__init__(msg)
+        self.stage, self.tile, self.device = stage, tile, device
 
 
 class DeviceQueue:
@@ -49,28 +63,64 @@ class DeviceQueue:
     the backend.  The queue keeps a two-deep completion window (the odd/even
     double buffer): older results are released so their buffers can be
     reclaimed or donated while newer tiles are still in flight.
+
+    ``injector`` arms the queue with a :class:`~repro.runtime.faults.
+    FaultPlan`: each ``submit`` that names a ``site`` consults the plan
+    first — ``raise``/``drop`` faults abort *before* the callable runs
+    (device state untouched, retry-safe), ``stall`` sleeps, ``nan``
+    poisons the returned value.  ``tag`` (defaults to ``site``) labels
+    the in-flight window so a deferred device error reported at
+    ``drain()`` names the tasks that were actually in flight.
     """
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, *, injector: FaultPlan | None = None):
         self.name = name
+        self.injector = injector
         self.dispatched = 0
         self._window = collections.deque(maxlen=2)
+        self._tags = collections.deque(maxlen=2)
 
-    def submit(self, fn: Callable, *args):
+    def submit(self, fn: Callable, *args, site: str | None = None,
+               tag: str | None = None):
+        spec = (self.injector.draw(site)
+                if self.injector is not None else None)
+        if spec is not None:
+            if spec.kind == "drop":
+                raise TaskDropped(
+                    f"queue {self.name}: task at site {site!r} dropped "
+                    f"before dispatch (injected)")
+            if spec.kind == "raise":
+                raise InjectedKernelError(
+                    f"queue {self.name}: kernel at site {site!r} raised "
+                    f"(injected)")
+            if spec.kind == "stall":
+                time.sleep(spec.delay_s)
         out = fn(*args)
         self.dispatched += 1
+        if spec is not None and spec.kind == "nan":
+            out = self.injector.poison(out)
         self._window.append(out)
+        self._tags.append(tag or site or self.name)
         return out
 
     def drain(self) -> None:
         """Block until the completion window has retired (program end /
-        explicit sync point — never called per tile in pipelined mode)."""
+        explicit sync point — never called per tile in pipelined mode).
+        Deferred device errors surface here, annotated with the tasks
+        still in flight."""
         leaves = jax.tree_util.tree_leaves(list(self._window))
         live = [a for a in leaves
                 if not (hasattr(a, "is_deleted") and a.is_deleted())]
         if live:
-            jax.block_until_ready(live)
+            try:
+                jax.block_until_ready(live)
+            except Exception as e:
+                raise ExecutorTaskError(
+                    f"queue {self.name}: deferred task error at drain "
+                    f"(in flight: {', '.join(self._tags) or 'none'}): "
+                    f"{e}", device=self.name) from e
         self._window.clear()
+        self._tags.clear()
 
 
 class AsyncExecutor:
@@ -83,11 +133,13 @@ class AsyncExecutor:
     """
 
     def __init__(self, graph: Graph, placement: dict[str, str],
-                 cluster: Cluster, report: ScheduleReport):
+                 cluster: Cluster, report: ScheduleReport,
+                 injector: FaultPlan | None = None):
         self.graph = graph
         self.placement = placement
         self.cluster = cluster
         self.report = report
+        self.injector = injector
         self.n_tiles = report.n_tiles
         dma_in = report.stages[0]
         self.streamed: tuple[str, ...] = dma_in.inputs
@@ -105,7 +157,8 @@ class AsyncExecutor:
         self._consumers: dict[str, int] = stage_consumers(report.stages)
 
         self.queues: dict[str, DeviceQueue] = {
-            st.device: DeviceQueue(st.device) for st in report.stages
+            st.device: DeviceQueue(st.device, injector=injector)
+            for st in report.stages
         }
         self._stage_fns = {
             st.stage: self._compile_stage(st)
@@ -138,27 +191,46 @@ class AsyncExecutor:
     # ----------------------------------------------------------- dispatch
     def _dispatch(self, st: StageTask, tile: int, tick: int, values,
                   weights, env, pending, out_tiles):
+        """Dispatch one stage/tile task, annotating ANY failure (real or
+        injected) with its stage/tile/accelerator before it propagates —
+        so it reaches the ``run()`` caller naming the task that died."""
+        try:
+            return self._dispatch_task(st, tile, tick, values, weights,
+                                       env, pending, out_tiles)
+        except ExecutorTaskError:
+            raise
+        except Exception as e:
+            raise ExecutorTaskError(
+                f"stage {st.stage!r} (tile {tile}, tick {tick}) on "
+                f"accelerator {st.device!r} failed: {e}",
+                stage=st.stage, tile=tile, device=st.device) from e
+
+    def _dispatch_task(self, st: StageTask, tile: int, tick: int, values,
+                       weights, env, pending, out_tiles):
         q = self.queues[st.device]
         self.dispatch_log.append((tick, st.stage, st.device, tile))
+        tag = f"{st.stage}[tile {tile}]"
         if st.stage == "dma_in":
             slices = []
             for name in st.inputs:
                 env[tile][name] = q.submit(
                     self._slicers[name], values[name],
-                    jnp.int32(tile))
+                    jnp.int32(tile), site=st.stage, tag=tag)
                 slices.append(env[tile][name])
             return slices
         if st.stage == "dma_out":
             copies = []
             for name in st.inputs:
-                out = q.submit(self._dma_copy, env[tile][name])
+                out = q.submit(self._dma_copy, env[tile][name],
+                               site=st.stage, tag=tag)
                 out_tiles[name][tile] = out
                 copies.append(out)
                 self._release(env, pending, tile, name)
             return copies
         args = [env[tile][i] if i in st.tiled_inputs else weights[i]
                 for i in st.inputs]
-        out = q.submit(self._stage_fns[st.stage], *args)
+        out = q.submit(self._stage_fns[st.stage], *args,
+                       site=st.stage, tag=tag)
         env[tile][st.output] = out
         for i in st.inputs:
             if i in st.tiled_inputs:

@@ -1,0 +1,205 @@
+"""Deterministic, seedable fault injection for the serving/executor
+runtime — the chaos half of the robustness story.
+
+A :class:`FaultPlan` is a seeded random program over five fault classes,
+consulted at well-defined *sites* in the dispatch path:
+
+  ==========  =========================  =================================
+  kind        fires at                   effect
+  ==========  =========================  =================================
+  ``stall``   dispatch (prefill/decode   sleeps ``delay_s`` before the
+              /executor stage)           dispatch — an accelerator slow-
+                                         down; surfaces as tick-latency
+                                         stragglers, never corrupts state
+  ``raise``   dispatch                   raises :class:`InjectedKernelError`
+                                         *before* the kernel runs — a
+                                         datapath that faulted; retryable
+  ``drop``    dispatch                   raises :class:`TaskDropped`
+                                         *before* the kernel runs — a
+                                         ``DeviceQueue`` task that never
+                                         made it to the device; retryable
+  ``nan``     dispatch (after the        overwrites one random row of the
+              kernel ran)                result's leading float array with
+                                         NaN/Inf — a datapath that
+                                         silently computed garbage
+  ``pressure``  ``"pool"`` site (tick    pins ``pages`` free pool pages
+              start, per shard)          for ``ticks`` ticks — page-pool
+                                         exhaustion without real load
+  ==========  =========================  =================================
+
+Faults that fire *before* a dispatch (``raise``/``drop``) leave device
+state untouched, so the caller may retry the identical submit; ``nan``
+poisons only the returned value (one batch row), so detection can retire
+the poisoned slot alone.  This is what makes the recovery paths provable
+bit-safe: no injected fault mutates a surviving request's cache.
+
+Determinism: the plan owns one ``numpy`` Generator seeded at
+construction.  Each ``draw()``/``poison()`` consumes from it in program
+order, so a fixed seed and workload replay the exact same fault
+schedule — the property the CI ``chaos-smoke`` job and the regression
+tests rely on.
+
+Plans parse from a compact CLI spec (``serve.py --inject``)::
+
+    seed=3,stall:0.05:delay_s=0.002,raise:0.08,drop:0.08,nan:0.08,
+    pressure:0.15:pages=2:ticks=2
+
+i.e. comma-separated ``kind:probability[:knob=value...][@site]`` tokens
+plus an optional ``seed=N``.  ``site`` restricts a spec to one dispatch
+site (``prefill``, ``decode``, or an executor stage name); the default
+``*`` matches every dispatch site.  ``pressure`` specs always live at
+the ``pool`` site.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "FaultError", "InjectedKernelError", "TaskDropped",
+    "FaultSpec", "FaultPlan", "DISPATCH_KINDS", "KINDS",
+]
+
+DISPATCH_KINDS = ("stall", "raise", "drop", "nan")
+KINDS = DISPATCH_KINDS + ("pressure",)
+
+
+class FaultError(RuntimeError):
+    """Base class for injected dispatch faults (always retry-safe: the
+    fault fired before the kernel ran, device state is untouched)."""
+
+
+class InjectedKernelError(FaultError):
+    """An accelerator kernel that raised instead of computing."""
+
+
+class TaskDropped(FaultError):
+    """A ``DeviceQueue`` task that was lost before reaching the device."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault class armed with a per-site firing probability."""
+
+    kind: str                 # one of KINDS
+    p: float                  # probability per eligible draw
+    site: str = "*"           # "*" = any dispatch site; "pool" for pressure
+    delay_s: float = 0.002    # stall: injected latency
+    pages: int = 1            # pressure: free pages to pin
+    ticks: int = 2            # pressure: ticks to hold them
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r} (want one of {KINDS})")
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"fault probability {self.p} not in [0, 1]")
+        if self.kind == "pressure" and self.site == "*":
+            object.__setattr__(self, "site", "pool")
+
+    def matches(self, site: str) -> bool:
+        if self.kind == "pressure":
+            return site == "pool"
+        if site == "pool":
+            return False
+        return self.site == "*" or self.site == site
+
+
+class FaultPlan:
+    """A seeded schedule of :class:`FaultSpec` draws.
+
+    ``draw(site)`` consults every matching spec in declaration order and
+    returns the first that fires (or None); ``injected`` counts fired
+    faults per kind, so tests and ``Server.stats()`` can assert a chaos
+    run actually exercised each class.
+    """
+
+    def __init__(self, specs, *, seed: int = 0):
+        self.specs: list[FaultSpec] = list(specs)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.injected: dict[str, int] = {}
+
+    def __repr__(self):
+        body = ",".join(f"{s.kind}:{s.p}"
+                        + (f"@{s.site}" if s.site not in ("*", "pool")
+                           else "")
+                        for s in self.specs)
+        return f"FaultPlan(seed={self.seed},{body})"
+
+    # ------------------------------------------------------------- draw
+    def draw(self, site: str | None) -> FaultSpec | None:
+        """One fault decision for a dispatch (or pool) site.
+
+        Sites that opt out of injection (``site=None`` — e.g. the tiny
+        install/reset table updates) never fire and never consume
+        randomness, so arming a plan does not perturb their behaviour.
+        """
+        if site is None:
+            return None
+        for spec in self.specs:
+            if spec.matches(site) and self.rng.random() < spec.p:
+                self.injected[spec.kind] = self.injected.get(spec.kind,
+                                                             0) + 1
+                return spec
+        return None
+
+    # ----------------------------------------------------------- poison
+    def poison(self, out):
+        """NaN/Inf-corrupt ONE random row of the result's leading float
+        array (tuples recurse into their first element: the logits of a
+        ``(logits, cache)`` pair — the cache stays intact, so only the
+        poisoned row's *request* is damaged, never the whole batch)."""
+        import jax.numpy as jnp
+        if isinstance(out, tuple):
+            return (self.poison(out[0]),) + tuple(out[1:])
+        if not (hasattr(out, "at") and getattr(out, "ndim", 0) >= 1
+                and jnp.issubdtype(out.dtype, jnp.floating)):
+            return out
+        row = int(self.rng.integers(out.shape[0]))
+        bad = jnp.nan if self.rng.random() < 0.5 else jnp.inf
+        return out.at[row].set(bad)
+
+    # ------------------------------------------------------------ parse
+    @classmethod
+    def parse(cls, text: str) -> "FaultPlan":
+        """Parse the ``--inject`` mini-language (see module docstring)."""
+        seed = 0
+        specs: list[FaultSpec] = []
+        for tok in text.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            if tok.startswith("seed="):
+                seed = int(tok[len("seed="):])
+                continue
+            site = "*"
+            if "@" in tok:
+                tok, site = tok.rsplit("@", 1)
+            parts = tok.split(":")
+            kind = parts[0]
+            kw: dict = {"site": site}
+            if len(parts) > 1:
+                p = float(parts[1])
+            else:
+                p = 0.1
+            for extra in parts[2:]:
+                k, _, v = extra.partition("=")
+                if k not in ("delay_s", "pages", "ticks"):
+                    raise ValueError(
+                        f"unknown fault knob {k!r} in {tok!r}")
+                kw[k] = float(v) if k == "delay_s" else int(v)
+            specs.append(FaultSpec(kind, p, **kw))
+        if not specs:
+            raise ValueError(f"fault plan {text!r} declares no faults")
+        return cls(specs, seed=seed)
+
+    @classmethod
+    def all_kinds(cls, *, seed: int = 0, p: float = 0.05,
+                  delay_s: float = 0.002, pages: int = 1,
+                  ticks: int = 2) -> "FaultPlan":
+        """A plan covering every fault class at probability ``p`` — the
+        acceptance-criteria chaos workload in one call."""
+        return cls([FaultSpec(k, p, delay_s=delay_s, pages=pages,
+                              ticks=ticks) for k in KINDS], seed=seed)

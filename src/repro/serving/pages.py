@@ -34,7 +34,10 @@ class PagePool:
     page an active slot still references).  ``owner`` partitions the
     refcount between the two holder kinds: ``"slot"`` (a request's page
     table, including match()-retained prefixes held on the caller's
-    behalf) and ``"tree"`` (prefix-tree nodes).
+    behalf) and ``"tree"`` (prefix-tree nodes).  ``note()`` interleaves
+    annotation-only ``("event", tag, info)`` entries — e.g. the server's
+    fault-recovery markers — which the checker accepts and skips, so a
+    verified trace also documents *why* its releases happened.
     """
 
     def __init__(self, n_pages: int, page_size: int, *,
@@ -72,6 +75,18 @@ class PagePool:
         if self.trace is not None:
             self.trace.append(("alloc", tuple(pages)))
         return pages
+
+    # ------------------------------------------------------------ events
+    def note(self, tag: str, **info) -> None:
+        """Append an annotation-only ``("event", tag, info)`` entry to the
+        trace (no-op when not recording).  Events carry no refcount
+        semantics — the serving checker skips them — but they anchor the
+        surrounding alloc/release ops to a cause (e.g. the server notes
+        ``fault_recovery`` before releasing a quarantined slot's pages,
+        so a trace dump reads as a causal story, not bare arithmetic)."""
+        if self.trace is not None:
+            self.trace.append(
+                ("event", tag, tuple(sorted(info.items()))))
 
     # ---------------------------------------------------------- refcount
     def retain(self, pages, *, owner: str = "slot") -> None:

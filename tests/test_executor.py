@@ -186,3 +186,43 @@ def test_device_queue_fifo_and_drain():
     q.drain()
     np.testing.assert_array_equal(np.asarray(outs[-1]),
                                   np.full((4,), 8.0))
+
+
+# ------------------------------------------------------ fault propagation ----
+def test_injected_task_failure_surfaces_with_stage_context():
+    """A task that dies inside a DeviceQueue must reach the run() caller
+    as ExecutorTaskError naming the stage, tile, and accelerator — not as
+    a detached traceback at some arbitrary later dispatch."""
+    from repro.runtime.executor import ExecutorTaskError
+    from repro.runtime.faults import FaultPlan, FaultSpec
+    g = tinyml_graph()
+    c = cluster_6d()
+    p = place(g, c)
+    rep = _schedule(g, p, c, 2)
+    victim = rep.stages[1]                     # first compute stage
+    plan = FaultPlan([FaultSpec("raise", 1.0, site=victim.stage)], seed=0)
+    ex = AsyncExecutor(g, p, c, rep, injector=plan)
+    with pytest.raises(ExecutorTaskError) as ei:
+        ex(_vals(g))
+    err = ei.value
+    assert err.stage == victim.stage
+    assert err.device == victim.device
+    assert err.tile == 0                       # the first eligible tile
+    msg = str(err)
+    assert victim.stage in msg and victim.device in msg and "tile 0" in msg
+
+
+def test_armed_but_silent_plan_never_perturbs_results():
+    """An injector whose specs never fire must leave the pipeline
+    bit-identical (injection draws are out-of-band of the data path)."""
+    from repro.runtime.faults import FaultPlan, FaultSpec
+    g = tinyml_graph()
+    c = cluster_6d()
+    p = place(g, c)
+    rep = _schedule(g, p, c, 4)
+    ref = emit(g, p, c)(_vals(g))["fc"]
+    plan = FaultPlan([FaultSpec("raise", 0.0), FaultSpec("nan", 0.0)],
+                     seed=0)
+    got = AsyncExecutor(g, p, c, rep, injector=plan)(_vals(g))["fc"]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert plan.injected == {}

@@ -1,0 +1,376 @@
+"""Fault-injection and fault-tolerance tests (the chaos harness).
+
+The robustness acceptance bar mirrors the serving one: whatever the
+seeded :class:`FaultPlan` throws at the server — stalls, kernel raises,
+dropped queue tasks, NaN-poisoned logits, page-pool pressure — every
+request must either *survive bit-identically* to its solo reference or
+retire with an explicit reason, with the page-refcount verifier staying
+clean throughout.
+"""
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import reduce
+from repro.launch.serve import (
+    SURVIVOR_REASONS, Request, ServePolicy, Server, drain, solo_reference,
+)
+from repro.models import lm
+from repro.runtime.faults import (
+    FaultPlan, FaultSpec, InjectedKernelError, TaskDropped,
+)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduce(configs.get("smollm_135m"))
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lengths]
+
+
+# ------------------------------------------------------------- FaultPlan ----
+def test_plan_parse_roundtrip_and_validation():
+    plan = FaultPlan.parse(
+        "seed=9,stall:0.1:delay_s=0.001,raise:0.2@decode,drop:0.3,"
+        "nan:0.4,pressure:0.5:pages=3:ticks=4")
+    assert plan.seed == 9
+    kinds = {s.kind: s for s in plan.specs}
+    assert set(kinds) == {"stall", "raise", "drop", "nan", "pressure"}
+    assert kinds["stall"].delay_s == 0.001
+    assert kinds["raise"].site == "decode"
+    assert kinds["pressure"].pages == 3 and kinds["pressure"].ticks == 4
+    assert kinds["pressure"].site == "pool"     # forced for pressure
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("explode:0.5")
+    with pytest.raises(ValueError, match="unknown fault knob"):
+        FaultPlan.parse("stall:0.5:latency=3")
+    with pytest.raises(ValueError, match="no faults"):
+        FaultPlan.parse("seed=4")
+    with pytest.raises(ValueError, match="not in"):
+        FaultSpec("raise", 1.5)
+
+
+def test_plan_draws_are_seed_deterministic():
+    """Same seed + same draw sequence => identical fault schedule (what
+    the CI chaos-smoke job and every test here rely on)."""
+    def mk(s):
+        return FaultPlan.parse(f"seed={s},raise:0.3,nan:0.2,drop:0.1")
+
+    sites = ["prefill", "decode", "decode", "pool", "prefill"] * 20
+    p1, p2, p3 = mk(5), mk(5), mk(6)
+    seq1 = [getattr(p1.draw(s), "kind", None) for s in sites]
+    seq2 = [getattr(p2.draw(s), "kind", None) for s in sites]
+    seq3 = [getattr(p3.draw(s), "kind", None) for s in sites]
+    assert seq1 == seq2
+    assert seq1 != seq3                       # a different seed diverges
+    assert p1.injected == p2.injected
+    # sites that opt out never fire and never consume randomness
+    q1, q2 = mk(5), mk(5)
+    assert q1.draw(None) is None
+    seqa = [getattr(q1.draw(s), "kind", None) for s in sites]
+    q2.draw(None)
+    seqb = [getattr(q2.draw(s), "kind", None) for s in sites]
+    assert seqa == seqb == seq1
+
+
+def test_poison_corrupts_one_row_and_spares_the_cache():
+    import jax.numpy as jnp
+    plan = FaultPlan([FaultSpec("nan", 1.0)], seed=0)
+    logits = jnp.ones((4, 7), jnp.float32)
+    cache = jnp.full((2, 3), 5.0)
+    out, got_cache = plan.poison((logits, cache))
+    assert got_cache is cache                  # cache element untouched
+    bad_rows = ~np.asarray(jnp.isfinite(out)).all(axis=-1)
+    assert bad_rows.sum() == 1                 # exactly one poisoned row
+    finite = np.asarray(out)[~bad_rows]
+    np.testing.assert_array_equal(finite, np.ones_like(finite))
+    # non-float results pass through untouched
+    ints = jnp.arange(6, dtype=jnp.int32)
+    assert plan.poison(ints) is ints
+
+
+def test_device_queue_raises_injected_faults_before_dispatch():
+    from repro.runtime.executor import DeviceQueue
+    calls = []
+    q = DeviceQueue("acc0", injector=FaultPlan(
+        [FaultSpec("raise", 1.0, site="bad")], seed=0))
+    with pytest.raises(InjectedKernelError, match="site 'bad'"):
+        q.submit(lambda: calls.append(1), site="bad")
+    assert not calls                           # fn never ran: retry-safe
+    assert q.submit(lambda: 42, site="other") == 42
+    qd = DeviceQueue("acc0", injector=FaultPlan(
+        [FaultSpec("drop", 1.0)], seed=0))
+    with pytest.raises(TaskDropped):
+        qd.submit(lambda: calls.append(1), site="decode")
+    assert not calls
+
+
+# ----------------------------------------------------- chaos serving runs ----
+def _chaos_drain(server, pending):
+    return drain(server, pending, max_iters=800)
+
+
+def _assert_outcomes(cfg, params, server, done, max_len, *,
+                     expect_survivors=True):
+    """Every request retired with an explicit reason; every survivor is
+    bit-identical to its solo reference (the --check oracle)."""
+    for r in done:
+        assert r.finish_reason, f"request {r.rid} retired silently"
+    survivors = [r for r in done if r.finish_reason in SURVIVOR_REASONS]
+    if expect_survivors:
+        assert survivors, "chaos run killed every request"
+    for r in survivors:
+        ref = solo_reference(cfg, params, r.prompt, r.max_new, max_len)
+        assert r.out == ref, (r.rid, r.finish_reason, r.out, ref)
+    return survivors
+
+
+def test_chaos_all_five_fault_classes_staggered_run(smollm):
+    """The acceptance-criteria workload: a staggered multi-request run
+    under a seeded plan covering all five fault classes completes with
+    recoveries, explicit retirement reasons, bit-identical survivors,
+    a clean page-refcount verifier, and nonzero fault counters."""
+    cfg, params = smollm
+    gen, n_req = 8, 10
+    max_len = 16 + gen + 2
+    plan = FaultPlan.parse(
+        "seed=7,raise:0.25,nan:0.15,drop:0.1,stall:0.05:delay_s=0.001,"
+        "pressure:0.2:pages=4")
+    server = Server(cfg, params, batch=4, max_len=max_len,
+                    microbatches=2, verify=True, inject=plan)
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    pending = [
+        Request(i, np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size,
+                                  int(rng.integers(2, 8))).astype(np.int32)]),
+            gen, arrival=i)
+        for i in range(n_req)]
+    done = _chaos_drain(server, pending)
+    assert len(done) == n_req
+    _assert_outcomes(cfg, params, server, done, max_len)
+    st = server.stats()
+    fired = st["faults_injected"]
+    # the plan covers all five classes and the workload is long enough
+    # that each class actually fires at this seed
+    assert set(fired) == {"stall", "raise", "drop", "nan", "pressure"}
+    assert all(v > 0 for v in fired.values())
+    assert st["faults_detected"] > 0 and st["retries"] > 0
+    assert st["recoveries"] > 0                # quarantine path exercised
+    assert st["slots_quarantined"] > 0
+    server.verify()                            # no refcount diagnostics
+
+
+def test_chaos_retries_mask_transient_faults_bit_identically(smollm):
+    """Moderate fault rates: bounded retry absorbs every transient raise/
+    drop, so ALL requests survive and match their references — faults
+    must be invisible in the tokens, not just survivable."""
+    cfg, params = smollm
+    gen = 6
+    max_len = 12 + gen + 2
+    plan = FaultPlan.parse("seed=3,raise:0.08,drop:0.08,stall:0.05")
+    server = Server(cfg, params, batch=2, max_len=max_len, verify=True,
+                    inject=plan)
+    pending = [Request(i, p, gen, arrival=2 * i)
+               for i, p in enumerate(_prompts(cfg, [12, 7, 9, 5], seed=5))]
+    done = _chaos_drain(server, pending)
+    survivors = _assert_outcomes(cfg, params, server, done, max_len)
+    assert len(survivors) == len(done) == 4    # nobody was lost
+    st = server.stats()
+    assert sum(st["faults_injected"].values()) > 0
+    assert st["retries"] > 0
+    server.verify()
+
+
+def test_nan_detection_retires_only_the_poisoned_slot(smollm):
+    """A NaN-poisoned decode row must quarantine/recover ONLY its own
+    request: the neighbour sharing the batch keeps decoding untouched
+    and both end bit-identical (recovery restarts deterministically)."""
+    cfg, params = smollm
+    gen = 8
+    max_len = 10 + gen + 2
+    # nan only, decode site only, seed chosen so it fires mid-stream
+    plan = FaultPlan.parse("seed=4,nan:0.1@decode")
+    server = Server(cfg, params, batch=2, max_len=max_len, verify=True,
+                    inject=plan)
+    pending = [Request(i, p, gen)
+               for i, p in enumerate(_prompts(cfg, [10, 8], seed=9))]
+    done = _chaos_drain(server, pending)
+    assert server.inject.injected.get("nan", 0) > 0
+    survivors = _assert_outcomes(cfg, params, server, done, max_len)
+    assert len(survivors) == 2                 # both made it
+    st = server.stats()
+    assert st["recoveries"] > 0                # poisoned slot went through
+    assert st["recovered_requests"] > 0        # ... and came back whole
+    server.verify()
+
+
+def test_health_sheds_new_admissions_with_reason(smollm):
+    """Sustained fault pressure trips healthy -> shedding: late arrivals
+    are refused with an explicit shed reason instead of being silently
+    deferred, while already-admitted work still completes."""
+    cfg, params = smollm
+    gen = 8
+    max_len = 16 + gen + 2
+    plan = FaultPlan.parse(
+        "seed=7,raise:0.25,nan:0.15,drop:0.1,stall:0.05:delay_s=0.001,"
+        "pressure:0.2:pages=4")
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    server = Server(cfg, params, batch=4, max_len=max_len,
+                    microbatches=2, verify=True, inject=plan)
+    pending = [
+        Request(i, np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size,
+                                  int(rng.integers(2, 8))).astype(np.int32)]),
+            gen, arrival=i)
+        for i in range(10)]
+    done = _chaos_drain(server, pending)
+    st = server.stats()
+    assert st["shed"] > 0
+    shed = [r for r in done if r.finish_reason
+            and r.finish_reason.startswith("shed:")]
+    assert shed and all(r.out == [] for r in shed)
+    reasons = {r.finish_reason for r in shed}
+    assert reasons <= {"shed:fault_rate", "shed:pool_pressure"}
+    _assert_outcomes(cfg, params, server, done, max_len)
+    server.verify()
+
+
+# ----------------------------------------------- deadlines and defer caps ----
+def test_deadline_retires_with_explicit_reason(smollm):
+    """A request whose wall-clock budget expires is retired (partial
+    output kept, pages released, reason explicit) instead of holding its
+    slot forever."""
+    cfg, params = smollm
+    gen = 32
+    max_len = 6 + gen + 2
+    policy = ServePolicy(deadline_s=0.0)       # expires on the first tick
+    server = Server(cfg, params, batch=2, max_len=max_len, verify=True,
+                    policy=policy)
+    pending = [Request(i, p, gen)
+               for i, p in enumerate(_prompts(cfg, [6, 5], seed=21))]
+    done = _chaos_drain(server, pending)
+    assert all(r.finish_reason == "deadline" for r in done)
+    assert all(len(r.out) < gen for r in done)
+    assert server.stats()["deadline_retired"] == 2
+    assert all(p is None for p in server.slot_pages)   # pages released
+    server.verify()
+
+
+def test_per_request_deadline_overrides_policy(smollm):
+    cfg, params = smollm
+    gen = 16
+    max_len = 6 + gen + 2
+    server = Server(cfg, params, batch=2, max_len=max_len)
+    pa, pb = _prompts(cfg, [6, 6], seed=31)
+    done = _chaos_drain(server, [
+        Request(0, pa, gen, deadline_s=0.0),   # expires immediately
+        Request(1, pb, gen),                   # unbounded (policy default)
+    ])
+    by = {r.rid: r for r in done}
+    assert by[0].finish_reason == "deadline"
+    assert by[1].finish_reason == "length"
+    assert by[1].out == solo_reference(cfg, params, pb, gen, max_len)
+
+
+def test_defer_cap_rejects_all_pages_pinned_livelock(smollm):
+    """The all-pages-pinned livelock regression: a follower that can
+    never get pool pages is rejected after ``defer_cap`` deferrals with
+    an explicit reason — not re-deferred forever."""
+    cfg, params = smollm
+    gen, P = 24, 4
+    max_len = 6 + gen + 2
+    pa, pb = _prompts(cfg, [6, 6], seed=13)
+    # pool of 8: A needs all 8 pages and holds them for 24 ticks; B's
+    # admission can never be satisfied while A runs
+    policy = ServePolicy(defer_cap=3)
+    server = Server(cfg, params, batch=2, max_len=max_len, page_size=P,
+                    pool_pages=8, verify=True, policy=policy)
+    done = _chaos_drain(server, [Request(0, pa, gen), Request(1, pb, gen)])
+    by = {r.rid: r for r in done}
+    assert by[1].finish_reason == "rejected:defer_cap"
+    assert by[1].deferrals > policy.defer_cap
+    assert by[1].out == []
+    st = server.stats()
+    assert st["rejected"] == 1
+    assert st["deferred_admissions"] >= policy.defer_cap
+    # the page-hog itself is unharmed
+    assert by[0].out == solo_reference(cfg, params, pa, gen, max_len)
+    server.verify()
+
+
+# --------------------------------------------------- drain diagnosability ----
+def test_drain_timeout_names_stuck_requests_and_stats(smollm):
+    """A non-converging drain must say WHAT is stuck (rid, progress,
+    slot/shard) and include a stats snapshot — not just 'did not
+    converge'."""
+    cfg, params = smollm
+    gen = 50
+    max_len = 4 + gen + 2
+    server = Server(cfg, params, batch=2, max_len=max_len)
+    (prompt,) = _prompts(cfg, [4], seed=2)
+    never = Request(7, _prompts(cfg, [4], seed=3)[0], gen, arrival=10**6)
+    with pytest.raises(RuntimeError) as ei:
+        drain(server, [Request(3, prompt, gen), never], max_iters=4)
+    msg = str(ei.value)
+    assert "did not converge in 4" in msg
+    assert "rid 3" in msg and "slot 0" in msg and "shard 0" in msg
+    assert "5/50 tokens" in msg                # admission + 4 decode ticks
+    assert "never admitted: [7]" in msg
+    assert "'admitted': 1" in msg              # the stats() snapshot
+
+
+def test_quarantined_slot_refuses_admission_until_expiry(smollm):
+    cfg, params = smollm
+    gen = 4
+    max_len = 6 + gen + 2
+    server = Server(cfg, params, batch=1, max_len=max_len,
+                    policy=ServePolicy(quarantine_ticks=2))
+    pa, pb = _prompts(cfg, [6, 5], seed=41)
+    r0 = Request(0, pa, gen)
+    assert server.admit(r0)
+    server._recover(r0, 0, "nan_logits")       # poisoned mid-stream
+    assert r0 in server.requeue and server.slots[0] is None
+    assert not server.admit(Request(1, pb, gen))   # slot quarantined
+    server.tick()                              # clock 1: still quarantined
+    assert server.slots[0] is None and r0 in server.requeue
+    server.tick()                              # clock 2: expiry — the
+    assert server.slots[0] is r0               # recovery reclaims the slot
+    assert r0 not in server.requeue
+    assert server.stats()["slots_quarantined"] == 1
+    for _ in range(gen + 2):                   # ticks to completion ...
+        if r0.done:
+            break
+        server.tick()
+    assert r0.done and r0.finish_reason == "length"
+    assert r0.out == solo_reference(cfg, params, pa, gen, max_len)
+
+
+def test_recovery_exhaustion_fails_with_reason(smollm):
+    """A request that keeps faulting past max_recoveries is retired as
+    failed:<reason> instead of looping forever."""
+    cfg, params = smollm
+    gen = 6
+    max_len = 6 + gen + 2
+    # every prefill dispatch raises: admission can never succeed
+    plan = FaultPlan.parse("seed=0,raise:1.0@prefill")
+    policy = ServePolicy(max_recoveries=1, max_retries=1,
+                         backoff_s=0.0001, quarantine_ticks=0)
+    server = Server(cfg, params, batch=2, max_len=max_len, verify=True,
+                    policy=policy, inject=plan)
+    (prompt,) = _prompts(cfg, [6], seed=51)
+    done = _chaos_drain(server, [Request(0, prompt, gen)])
+    assert done[0].finish_reason == "failed:prefill_failed"
+    st = server.stats()
+    assert st["failed_requests"] == 1
+    assert st["recoveries"] == policy.max_recoveries + 1
+    assert all(p is None for p in server.slot_pages)
+    server.verify()

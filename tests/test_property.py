@@ -144,3 +144,68 @@ def test_collective_parser_counts_kinds():
     assert out["total"] == sum(
         out[k] for k in ("all-reduce", "all-gather", "collective-permute",
                          "reduce-scatter", "all-to-all"))
+
+
+# ------------------------------------------------------------ paged KV ----
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_page_pool_prefix_tree_churn_refcount_discipline(data):
+    """Randomized admit/retire/evict/fault-recovery churn over a
+    PagePool + PrefixTree (the server's admission discipline, minus the
+    model): refcounts never leak, nothing is double-released, and the
+    recorded trace replays clean through the serving-invariant checker —
+    including the fault-recovery release path, which is exactly the
+    retire path plus an annotation event."""
+    from repro.analysis.serving import verify_pool
+    from repro.serving import PagePool, PrefixTree
+
+    P, gen = 4, 4
+    pool = PagePool(16, P, record=True)
+    tree = PrefixTree(pool)
+    live: dict[int, list[int]] = {}        # rid -> page table
+    rid = 0
+    for _ in range(data.draw(st.integers(5, 40), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "retire", "recover", "evict"]), label="op")
+        if op == "admit":
+            # tiny alphabet + short prompts => heavy prefix collisions
+            prompt = np.asarray(data.draw(
+                st.lists(st.integers(0, 2), min_size=2, max_size=12),
+                label="prompt"), np.int32)
+            shared, shared_len = tree.match(prompt)
+            n_total = -(-(len(prompt) + gen) // P)
+            n_priv = n_total - len(shared)
+            if pool.free_pages < n_priv:
+                tree.evict(n_priv - pool.free_pages)
+            priv = pool.alloc(n_priv)
+            if priv is None:
+                pool.release(shared)       # deferred admission
+                continue
+            table = shared + priv
+            tree.insert(prompt, table)
+            live[rid] = table
+            rid += 1
+        elif op in ("retire", "recover") and live:
+            victim = data.draw(st.sampled_from(sorted(live)),
+                               label="victim")
+            if op == "recover":            # the fault-recovery release
+                pool.note("fault_recovery", rid=victim, reason="test")
+            pool.release(live.pop(victim))
+        elif op == "evict":
+            tree.evict(data.draw(st.integers(1, 4), label="n_evict"))
+        # standing invariants after EVERY operation
+        assert (pool.refs >= 0).all()
+        assert pool.free_pages + pool.used_pages == pool.n_pages
+        assert not (pool.refs[sorted(pool._free)] > 0).any()
+    # the trace replays clean against the current holders ...
+    assert verify_pool(pool, tree, live_slot_pages=live.values()) == []
+    # ... and retiring everything leaves only tree-held pages, all at
+    # refcount exactly 1 (evictable, never leaked)
+    for table in live.values():
+        pool.release(table)
+    live.clear()
+    assert verify_pool(pool, tree) == []
+    assert pool.used_pages == tree.nodes
+    assert (pool.refs[pool.refs > 0] == 1).all()
+    tree.evict(tree.nodes)
+    assert pool.used_pages == 0 and pool.free_pages == pool.n_pages
