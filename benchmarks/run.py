@@ -6,6 +6,7 @@
   cells  — 40-cell LM roofline table (from the dry-run artifacts)
   micro  — kernel micro timings (CSV: name,us_per_call,derived)
   serve  — continuous-batching throughput, dense vs paged+prefix-reuse
+  gateway — closed-loop loadgen through the admission gateway
 """
 from __future__ import annotations
 
@@ -57,6 +58,30 @@ def main() -> None:
                   f"tok_per_s={r['tok_per_s']};ticks={r['ticks']};"
                   f"dispatches={r['dispatches']};"
                   f"p99_ms={r['tick_p99_ms']}{extra}")
+    if which in ("all", "gateway"):
+        import jax
+
+        import repro.configs as configs
+        from repro.configs.base import reduce as reduce_cfg
+        from repro.gateway.loadgen import DEFAULT_MIX, run_loadgen
+        from repro.launch.serve import Server
+        from repro.models import lm
+
+        cfg = reduce_cfg(configs.get("smollm_135m"))
+        params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+        gen_max = max(c.gen for c in DEFAULT_MIX)
+        for arrival in ("poisson", "bursty"):
+            server = Server(cfg, params, batch=8,
+                            max_len=16 + gen_max + 8, microbatches=2)
+            _, point = run_loadgen(server, requests=150, arrival=arrival,
+                                   verbose=False)
+            print(f"gateway.{arrival},,"
+                  f"tok_per_s={point['tok_per_s']};"
+                  f"ttft_p50_ms={point['ttft_ms']['p50']};"
+                  f"ttft_p99_ms={point['ttft_ms']['p99']};"
+                  f"token_p50_ms={point['token_latency_ms']['p50']};"
+                  f"survivors={point['survivors']};"
+                  f"rejections={point['rejections']}")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,10 @@ four things that can silently corrupt a run:
     accelerator (port starvation, element widths, FIFO footprints);
   * :mod:`repro.analysis.serving`  — abstract interpretation of
     ``PagePool``/``PrefixTree`` traces (refcount leaks, double release,
-    eviction of referenced pages).
+    eviction of referenced pages);
+  * :mod:`repro.analysis.gateway`  — gateway request-lifecycle
+    verification (every submission terminal, admitted requests retire
+    with a reason, cancellations release exactly their held pages).
 
 Entry points: ``analyze_pipeline`` (used by ``emit(verify=True)``),
 ``verify_pool`` (used by ``Server(verify=True)``), ``analyze_config``
@@ -25,6 +28,7 @@ from repro.analysis.configcheck import (
 from repro.analysis.diagnostics import (
     AnalysisError, Diagnostic, Report, Severity,
 )
+from repro.analysis.gateway import check_gateway_trace
 from repro.analysis.hazards import check_schedule
 from repro.analysis.memplan import check_allocation
 from repro.analysis.passes import (
@@ -37,6 +41,6 @@ __all__ = [
     "AnalysisError", "Diagnostic", "Report", "Severity",
     "PipelineArtifacts", "analyze_pipeline", "register_pass",
     "check_schedule", "check_allocation", "check_streamers",
-    "check_serving_trace", "verify_pool",
+    "check_serving_trace", "verify_pool", "check_gateway_trace",
     "analyze_config", "check_config", "exercise_serving",
 ]

@@ -1,0 +1,222 @@
+"""Checker 6 — gateway-lifecycle verification of the network front-end.
+
+Abstractly interprets a :class:`repro.gateway.Gateway` lifecycle trace
+(recorded with ``Gateway(..., record=True)``): a sequence of events
+
+  * ``("submit", rid, priority)`` — request arrived at the front door;
+  * ``("reject", rid, reason)`` — terminal, never occupied a slot;
+  * ``("admit", rid)`` — placed into a server slot;
+  * ``("retire", rid, finish_reason)`` — terminal, left its slot with a
+    reason;
+  * ``("cancel", rid, pages)`` — terminal, cancelled mid-flight while
+    holding the given page ids.
+
+The interpreter runs each request through the legal state machine
+``submitted -> admitted -> terminal`` and reports:
+
+  * **GWY001** submitted request with no terminal record — a dropped
+    request (the accounting contract says every submission ends in
+    exactly one response or rejection);
+  * **GWY002** admitted request never retired with a ``finish_reason``
+    (or retired with an empty one) — a slot occupant that vanished;
+  * **GWY003** lifecycle violation: an event for an unknown request,
+    duplicate submission, a second terminal event, admission after a
+    terminal event, retirement without admission, or a rejection of an
+    already-admitted request (rejections promise the request never
+    occupied a slot);
+  * **GWY004** cancellation released the wrong pages: the pool trace's
+    slot releases following the server's ``cancel`` marker do not match
+    the page ids the gateway observed the slot holding — a cancelled
+    request leaking (or over-releasing) KV pages;
+  * **GWY005** rejection without a reason — silent backpressure, which
+    the gateway contract forbids.
+
+``check_gateway_trace`` is pure over the traces so tests can feed
+hand-built histories with injected violations; ``Gateway.verify()``
+wraps it for a live gateway (and chains the server's SRV refcount
+verification underneath).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.analysis.diagnostics import Diagnostic, Severity
+
+__all__ = ["check_gateway_trace"]
+
+PASS = "gateway"
+
+_TERMINAL = ("rejected", "retired", "cancelled")
+
+
+def _err(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.ERROR, msg, dict(anchor), PASS)
+
+
+def _cancel_release(rid: object, pool_traces: Iterable[Sequence[tuple]]
+                    ) -> set[int] | None:
+    """Pages the pool traces record as slot-released right after the
+    server's ``cancel`` marker for ``rid`` — or None when no marker is
+    found.  ``Server.cancel`` notes the marker, then ``_retire`` releases
+    the slot's whole page table in exactly ONE release op (any later
+    slot release belongs to a different retirement and must not be
+    attributed to this cancellation)."""
+    for pt in pool_traces:
+        for i, op in enumerate(pt):
+            if op[0] != "event" or op[1] != "cancel":
+                continue
+            # PagePool.note stores info as sorted (key, value) pairs
+            info = op[2] if isinstance(op[2], dict) else dict(op[2])
+            if info.get("rid") == rid:
+                nxt = pt[i + 1] if i + 1 < len(pt) else None
+                if nxt is not None and nxt[0] == "release" \
+                        and nxt[2] == "slot":
+                    return {int(p) for p in nxt[1]}
+                return set()
+    return None
+
+
+def check_gateway_trace(
+    trace: Sequence[tuple],
+    *,
+    pool_traces: Iterable[Sequence[tuple]] = (),
+) -> list[Diagnostic]:
+    """Replay a gateway lifecycle trace through the legal state machine
+    and cross-check cancellations against the pool traces."""
+    diags: list[Diagnostic] = []
+    state: dict[object, str] = {}
+    pools = list(pool_traces)
+
+    for idx, ev in enumerate(trace):
+        kind = ev[0]
+        rid = ev[1] if len(ev) > 1 else None
+        st = state.get(rid)
+        if kind == "submit":
+            if st is not None:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: duplicate submission of request {rid!r} "
+                    f"(state {st})", rid=rid, op=idx))
+            state[rid] = "submitted"
+        elif kind == "admit":
+            if st is None:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: admission of unknown request {rid!r} "
+                    f"(never submitted)", rid=rid, op=idx))
+            elif st in _TERMINAL:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: admission of request {rid!r} after it "
+                    f"was already {st} — a terminal state is final",
+                    rid=rid, op=idx))
+            elif st == "admitted":
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: double admission of request {rid!r}",
+                    rid=rid, op=idx))
+            state[rid] = "admitted"
+        elif kind == "reject":
+            reason = ev[2] if len(ev) > 2 else ""
+            if not reason:
+                diags.append(_err(
+                    "GWY005",
+                    f"op {idx}: rejection of request {rid!r} without a "
+                    f"reason — backpressure must be explicit",
+                    rid=rid, op=idx))
+            if st is None:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: rejection of unknown request {rid!r}",
+                    rid=rid, op=idx))
+            elif st == "admitted":
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: rejection of request {rid!r} after "
+                    f"admission — a rejection promises the request never "
+                    f"occupied a slot", rid=rid, op=idx))
+            elif st in _TERMINAL:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: second terminal event (reject) for "
+                    f"request {rid!r} already {st}", rid=rid, op=idx))
+            state[rid] = "rejected"
+        elif kind == "retire":
+            reason = ev[2] if len(ev) > 2 else ""
+            if not reason:
+                diags.append(_err(
+                    "GWY002",
+                    f"op {idx}: request {rid!r} retired without a "
+                    f"finish_reason", rid=rid, op=idx))
+            if st is None:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: retirement of unknown request {rid!r}",
+                    rid=rid, op=idx))
+            elif st == "submitted":
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: retirement of request {rid!r} that was "
+                    f"never admitted", rid=rid, op=idx))
+            elif st in _TERMINAL:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: second terminal event (retire) for "
+                    f"request {rid!r} already {st}", rid=rid, op=idx))
+            state[rid] = "retired"
+        elif kind == "cancel":
+            pages = tuple(ev[2]) if len(ev) > 2 else ()
+            if st is None:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: cancellation of unknown request {rid!r}",
+                    rid=rid, op=idx))
+            elif st == "submitted":
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: mid-flight cancellation of request "
+                    f"{rid!r} that was never admitted (queued "
+                    f"cancellations record as rejections)",
+                    rid=rid, op=idx))
+            elif st in _TERMINAL:
+                diags.append(_err(
+                    "GWY003",
+                    f"op {idx}: second terminal event (cancel) for "
+                    f"request {rid!r} already {st}", rid=rid, op=idx))
+            state[rid] = "cancelled"
+            if pages and pools:
+                want = {int(p) for p in pages}
+                got = _cancel_release(rid, pools)
+                if got is None:
+                    diags.append(_err(
+                        "GWY004",
+                        f"op {idx}: cancellation of request {rid!r} held "
+                        f"pages {sorted(want)} but no pool trace records "
+                        f"a cancel marker for it", rid=rid, op=idx))
+                elif got != want:
+                    diags.append(_err(
+                        "GWY004",
+                        f"op {idx}: cancellation of request {rid!r} held "
+                        f"pages {sorted(want)} but the pool released "
+                        f"{sorted(got)} — cancelled request "
+                        f"{'leaks' if want - got else 'over-releases'} "
+                        f"KV pages", rid=rid, op=idx))
+        else:
+            diags.append(_err(
+                "GWY000",
+                f"op {idx}: unknown trace event {kind!r}", op=idx))
+
+    # ---- end-of-trace accounting: every request must be terminal
+    for rid, st in state.items():
+        if st == "submitted":
+            diags.append(_err(
+                "GWY001",
+                f"request {rid!r} was submitted but has no terminal "
+                f"record — neither a response nor a rejection",
+                rid=rid))
+        elif st == "admitted":
+            diags.append(_err(
+                "GWY002",
+                f"request {rid!r} was admitted but never retired with a "
+                f"finish_reason — its slot occupant vanished", rid=rid))
+    return diags

@@ -1,0 +1,49 @@
+"""``repro.gateway`` — the network front-end in front of the server.
+
+The gateway turns ``repro.launch.serve.Server`` from an in-process test
+loop into a *system*: requests arrive through an OpenAI-style schema
+(:mod:`api`), wait in priority queues under weighted-deficit fairness
+and explicit 429-style backpressure (:mod:`admission`), stream tokens
+incrementally as the server ticks (:mod:`gateway`), and every signal an
+operator needs — rolling TTFT/latency percentiles, throughput, queue
+depth, slot/pool utilization — is exported as JSON or Prometheus text
+(:mod:`metrics`).  :mod:`loadgen` closes the loop: a Poisson/bursty
+multi-class generator that drives thousands of requests through the
+stack and appends the resulting datapoint to
+``benchmarks/BENCH_serve.json``, so every later scale PR is measured
+against this one.
+
+The gateway consumes the server through exactly three verbs —
+``submit`` / ``poll`` / ``cancel`` — so the serving loop, fault
+tolerance, and the ``--check`` bit-equivalence oracle stay intact
+underneath it.  See "Gateway and admission" in ``docs/serving.md``.
+
+Import structure: ``serve.py`` uses :class:`RingBuffer` from
+:mod:`metrics`, and :mod:`gateway`/:mod:`loadgen` import ``serve`` —
+so those two resolve lazily (PEP 562) to keep the package cycle-free.
+"""
+from repro.gateway.admission import (
+    DEFAULT_CLASSES, AdmissionScheduler, PriorityClass,
+)
+from repro.gateway.api import (
+    PRIORITY_CLASSES, CompletionRequest, CompletionResponse, Rejection,
+    StreamChunk, Usage, status_for, validate,
+)
+from repro.gateway.metrics import GatewayMetrics, RingBuffer
+
+__all__ = [
+    "AdmissionScheduler", "DEFAULT_CLASSES", "PriorityClass",
+    "CompletionRequest", "CompletionResponse", "Rejection", "StreamChunk",
+    "Usage", "PRIORITY_CLASSES", "status_for", "validate",
+    "GatewayMetrics", "RingBuffer",
+    "Gateway",
+]
+
+
+def __getattr__(name: str):
+    # lazy: gateway.py imports repro.launch.serve, which imports
+    # repro.gateway.metrics — eager import here would be a cycle
+    if name == "Gateway":
+        from repro.gateway.gateway import Gateway
+        return Gateway
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,248 @@
+"""Admission scheduling: priority classes, weighted deficit fairness,
+queue-depth-aware batch sizing, explicit backpressure.
+
+The scheduler sits between the gateway's front door and the server's
+slot pool.  Three decisions live here, all loose-control host Python:
+
+**Which request next** — weighted deficit round-robin (WDRR) over the
+priority classes.  Each dispatch round credits every backlogged class
+with its ``weight``; a class spends one credit per dispatched request.
+Higher-weight classes therefore get proportionally more slots, but any
+class with ``weight > 0`` accrues credit every round, which yields the
+starvation bound the tests pin: a backlogged class dispatches at least
+one request every ``ceil(1 / weight)`` rounds no matter how hot its
+neighbours run.  Within a class, order is FIFO.
+
+**How many this step** — queue-depth-aware batch sizing.  Admission is
+not free: every admitted request costs a prefill dispatch before the
+next decode tick, so admitting a 64-deep burst at once would stall every
+in-flight request's next token.  ``batch_quota`` ramps with backlog:
+light load admits immediately (TTFT-optimal), heavy load admits in
+chunks of at most ``max_admit_per_step`` per step (decode-latency
+bounded) — and a degraded server halves the quota to favour finishing
+in-flight work over taking new work.
+
+**Whether to take it at all** — explicit backpressure.  A full per-class
+queue rejects with 429-family ``queue_full``; a server in the
+``shedding`` health state rejects with 503-family ``shed:<reason>``
+(surfacing the health machine instead of silently dropping); a request
+whose deadline expired while it queued is rejected with 408-family
+``deadline`` at *dispatch* time — it never occupies a slot it cannot
+use.  Every rejection carries a reason and an HTTP status
+(:func:`repro.gateway.api.status_for`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+from repro.gateway.api import CompletionRequest, Rejection
+
+__all__ = ["PriorityClass", "DEFAULT_CLASSES", "AdmissionScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PriorityClass:
+    """One admission class: WDRR ``weight`` (relative slot share while
+    contended) and ``max_depth`` (queue bound before 429s)."""
+
+    name: str
+    weight: float
+    max_depth: int = 256
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"class {self.name}: weight must be > 0 "
+                             f"(a zero-weight class would starve forever)")
+        if self.max_depth < 1:
+            raise ValueError(f"class {self.name}: max_depth must be >= 1")
+
+
+DEFAULT_CLASSES = (
+    PriorityClass("interactive", weight=4.0, max_depth=64),
+    PriorityClass("standard", weight=2.0, max_depth=128),
+    PriorityClass("batch", weight=1.0, max_depth=512),
+)
+
+
+@dataclasses.dataclass(eq=False)      # identity compare: prompts are arrays
+class _Queued:
+    req: CompletionRequest
+    t_enqueue: float
+
+
+class AdmissionScheduler:
+    """WDRR admission queues in front of the server's slot pool."""
+
+    def __init__(self, classes: tuple[PriorityClass, ...] = DEFAULT_CLASSES,
+                 *, max_admit_per_step: int = 4,
+                 clock=time.monotonic):
+        if not classes:
+            raise ValueError("need at least one priority class")
+        names = [c.name for c in classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate class names in {names}")
+        self.classes = {c.name: c for c in classes}
+        self.clock = clock
+        self.max_admit_per_step = max_admit_per_step
+        self.queues: dict[str, deque[_Queued]] = {
+            c.name: deque() for c in classes}
+        self._deficit: dict[str, float] = {c.name: 0.0 for c in classes}
+        self._rr = 0                 # rotating scan offset (see dispatch)
+        # counters
+        self.enqueued: dict[str, int] = {c.name: 0 for c in classes}
+        self.dispatched: dict[str, int] = {c.name: 0 for c in classes}
+        self.rejected: dict[str, int] = {}
+
+    # ------------------------------------------------------------ enqueue
+    @property
+    def depth(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def _reject(self, req: CompletionRequest, reason: str,
+                message: str) -> Rejection:
+        self.rejected[reason] = self.rejected.get(reason, 0) + 1
+        return Rejection(req.rid, reason, message)
+
+    def enqueue(self, req: CompletionRequest, *, health: str = "healthy",
+                shed_reason: str = "") -> Rejection | None:
+        """Admit ``req`` into its class queue, or reject loudly.
+
+        ``health`` is the server's state machine: while ``shedding`` the
+        gateway refuses NEW work with an explicit 503-family reason —
+        the backpressure contract that replaces silent drops."""
+        cls = self.classes.get(req.priority)
+        if cls is None:
+            return self._reject(
+                req, "invalid:priority",
+                f"unknown priority {req.priority!r}")
+        if health == "shedding":
+            reason = f"shed:{shed_reason or 'overload'}"
+            return self._reject(
+                req, reason,
+                f"server is shedding load ({shed_reason or 'overload'}); "
+                f"retry with backoff")
+        q = self.queues[cls.name]
+        if len(q) >= cls.max_depth:
+            return self._reject(
+                req, "queue_full",
+                f"class {cls.name!r} queue at capacity "
+                f"({cls.max_depth}); retry with backoff")
+        q.append(_Queued(req, self.clock()))
+        self.enqueued[cls.name] += 1
+        return None
+
+    def requeue_front(self, req: CompletionRequest,
+                      t_enqueue: float) -> None:
+        """Put a dispatched-but-not-admitted request back at the head of
+        its class queue (server slot/pool momentarily unavailable) —
+        keeps FIFO order and the original enqueue time, so its queueing
+        delay and deadline keep accruing from the true arrival."""
+        self.queues[req.priority].appendleft(_Queued(req, t_enqueue))
+
+    def cancel(self, rid: str) -> CompletionRequest | None:
+        """Remove a still-queued request by id (client cancellation)."""
+        for q in self.queues.values():
+            for item in q:
+                if item.req.rid == rid:
+                    q.remove(item)
+                    return item.req
+        return None
+
+    # ----------------------------------------------------------- dispatch
+    def batch_quota(self, free_slots: int, *,
+                    health: str = "healthy") -> int:
+        """How many admissions this step may perform.
+
+        Scales with backlog but never past ``max_admit_per_step`` (each
+        admission is a prefill dispatch that delays every in-flight
+        request's next decode tick) and never past ``free_slots``.  A
+        ``degraded`` server gets half the quota: finish in-flight work
+        before taking more."""
+        depth = self.depth
+        if depth == 0 or free_slots == 0:
+            return 0
+        quota = min(free_slots, depth, self.max_admit_per_step)
+        if health == "degraded":
+            quota = max(1, quota // 2)
+        return quota
+
+    def dispatch(self, free_slots: int, *, health: str = "healthy"
+                 ) -> tuple[list[tuple[CompletionRequest, float]],
+                            list[Rejection]]:
+        """Pick up to ``batch_quota`` requests to admit now.
+
+        Returns ``(ready, rejections)``: ``ready`` pairs each request
+        with its enqueue timestamp (the gateway turns that into queueing
+        delay and hands it back on ``requeue_front``); ``rejections``
+        are deadline-expired requests caught at dispatch — rejected
+        *here*, before they occupy a slot they could never finish in.
+        """
+        quota = self.batch_quota(free_slots, health=health)
+        ready: list[tuple[CompletionRequest, float]] = []
+        rejections: list[Rejection] = []
+        if quota == 0:
+            return ready, rejections
+        now = self.clock()
+        # WDRR: credit every backlogged class, spend one credit per
+        # dispatch, loop rounds until the quota is used or queues empty.
+        # Termination: every round credits weight > 0 to at least one
+        # backlogged class, so within ceil(1/min_weight) rounds some
+        # deficit crosses 1.0 and a request is popped (or expires).
+        # The scan resumes AFTER the class that exhausted the quota
+        # (self._rr): without the rotation, a quota of 1 would always be
+        # spent by the first class in declaration order and a
+        # fractional-weight neighbour's accrued deficit would never be
+        # reached — starvation the deficit machinery exists to prevent.
+        order = list(self.classes)
+        n = len(order)
+        while quota > 0 and self.depth > 0:
+            start = self._rr
+            for off in range(n):
+                k = (start + off) % n
+                name = order[k]
+                q = self.queues[name]
+                if not q:
+                    self._deficit[name] = 0.0    # no rollover while idle
+                    continue
+                self._deficit[name] += self.classes[name].weight
+                while q and self._deficit[name] >= 1.0 and quota > 0:
+                    item = q.popleft()
+                    self._deficit[name] -= 1.0
+                    req = item.req
+                    if req.deadline_s is not None \
+                            and now - item.t_enqueue > req.deadline_s:
+                        # expired in queue: reject, do not take a slot
+                        rejections.append(self._reject(
+                            req, "deadline",
+                            f"deadline_s={req.deadline_s} expired after "
+                            f"{now - item.t_enqueue:.3f}s in queue"))
+                        continue
+                    ready.append((req, item.t_enqueue))
+                    self.dispatched[name] += 1
+                    quota -= 1
+                if quota == 0:
+                    self._rr = (k + 1) % n
+                    break
+        return ready, rejections
+
+    # -------------------------------------------------------------- stats
+    def oldest_queued_age_s(self, now: float | None = None) -> float:
+        """Age of the oldest queued request (0.0 when queues are empty) —
+        the stuck-request signal for work that never reached a slot."""
+        heads = [q[0].t_enqueue for q in self.queues.values() if q]
+        if not heads:
+            return 0.0
+        return (self.clock() if now is None else now) - min(heads)
+
+    def stats(self) -> dict:
+        return {
+            "queue_depth": self.depth,
+            "queued_by_class": {n: len(q)
+                                for n, q in self.queues.items()},
+            "oldest_queued_age_s": round(self.oldest_queued_age_s(), 4),
+            "enqueued_by_class": dict(self.enqueued),
+            "dispatched_by_class": dict(self.dispatched),
+            "queue_rejected": dict(sorted(self.rejected.items())),
+        }

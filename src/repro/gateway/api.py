@@ -1,0 +1,195 @@
+"""Gateway request/response schema — the wire contract in front of
+``repro.launch.serve.Server``.
+
+The shapes follow the OpenAI-style completion API (prompt, max_tokens,
+stream flag, a ``finish_reason`` on every terminal response, and a
+``Usage`` block) extended with the two fields a multi-tenant serving
+system needs at admission time: a **priority class** and a per-request
+**deadline**.  Tokens are raw int32 ids — this repo has no tokenizer,
+and the bit-equivalence oracle (``--check``) compares token ids, so the
+API speaks ids end to end.
+
+Every request submitted to the gateway terminates in exactly one of:
+
+  * a :class:`CompletionResponse` — it occupied a slot; ``finish_reason``
+    says how it left (``length`` / ``eos`` are the survivors held to the
+    ``--check`` oracle; ``cancelled`` / ``deadline`` / ``failed:*`` carry
+    partial output);
+  * a :class:`Rejection` — it never occupied a slot; ``status`` is the
+    HTTP code a real front-end would return (429 queue-full /
+    defer-cap, 503 shedding, 408 deadline, 400 invalid, 499 cancelled
+    while queued).
+
+``Usage`` wires per-request token accounting to the prefix tree:
+``cached_tokens`` is exactly the request's ``shared_len`` — prompt
+tokens served from cached pages instead of being prefilled — so summing
+usage over responses reproduces the server's
+``prefill_tokens_skipped`` counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "PRIORITY_CLASSES", "CompletionRequest", "CompletionResponse",
+    "StreamChunk", "Usage", "Rejection", "status_for", "validate",
+]
+
+# admission priority classes, highest first (weights live in
+# repro.gateway.admission — the API only fixes the vocabulary)
+PRIORITY_CLASSES = ("interactive", "standard", "batch")
+
+
+@dataclasses.dataclass
+class CompletionRequest:
+    """One completion call as it arrives at the gateway."""
+
+    prompt: np.ndarray               # (prompt_len,) int32 token ids
+    max_tokens: int
+    priority: str = "standard"       # one of PRIORITY_CLASSES
+    deadline_s: float | None = None  # wall-clock budget from submission
+    stream: bool = False             # emit StreamChunks as tokens land
+    rid: str = ""                    # assigned by the gateway when empty
+
+
+@dataclasses.dataclass(frozen=True)
+class Usage:
+    """Per-request token accounting (the OpenAI ``usage`` block).
+
+    ``cached_tokens`` counts prompt tokens served straight from the
+    prefix tree's cached pages — work the server *skipped*; it is wired
+    to ``Request.shared_len`` / ``Server.prefill_tokens_skipped``."""
+
+    prompt_tokens: int
+    cached_tokens: int
+    generated_tokens: int
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_tokens + self.generated_tokens
+
+    def to_dict(self) -> dict:
+        return {
+            "prompt_tokens": self.prompt_tokens,
+            "cached_tokens": self.cached_tokens,
+            "generated_tokens": self.generated_tokens,
+            "total_tokens": self.total_tokens,
+        }
+
+
+@dataclasses.dataclass
+class CompletionResponse:
+    """Terminal record for a request that occupied a slot."""
+
+    rid: str
+    tokens: list[int]
+    finish_reason: str               # length|eos|cancelled|deadline|failed:*
+    usage: Usage
+    priority: str = "standard"
+    ttft_s: float | None = None      # submit -> first streamed token
+    latency_s: float = 0.0           # submit -> retirement
+    queue_delay_s: float = 0.0       # submit -> dispatched to a slot
+
+    def to_dict(self) -> dict:
+        return {
+            "id": self.rid,
+            "object": "completion",
+            "tokens": list(self.tokens),
+            "finish_reason": self.finish_reason,
+            "priority": self.priority,
+            "usage": self.usage.to_dict(),
+            "ttft_s": self.ttft_s,
+            "latency_s": self.latency_s,
+            "queue_delay_s": self.queue_delay_s,
+        }
+
+
+@dataclasses.dataclass
+class StreamChunk:
+    """Incremental delta for a streaming request (one per gateway step
+    that produced tokens).  ``restart=True`` means a fault recovery reset
+    the stream — previously streamed tokens are void and generation
+    restarts from the prompt (greedy decode makes the retry
+    deterministic, so the final stream equals the unfaulted one)."""
+
+    rid: str
+    tokens: list[int]
+    done: bool = False
+    finish_reason: str | None = None
+    restart: bool = False
+
+
+# 429-style status codes per rejection reason *family*: the gateway
+# refuses loudly, never drops silently (docs/serving.md has the table)
+_STATUS = {
+    "queue_full": 429,       # per-class admission queue at capacity
+    "defer_cap": 429,        # pool-dry deferrals exhausted (server)
+    "shed": 503,             # health machine shedding (fault/pool rate)
+    "deadline": 408,         # expired while queued — never took a slot
+    "invalid": 400,          # schema validation failed
+    "cancelled": 499,        # client cancelled while still queued
+}
+
+
+def status_for(reason: str) -> int:
+    """HTTP status for a rejection reason (family before the colon)."""
+    return _STATUS.get(reason.split(":", 1)[0], 500)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Terminal record for a request that never occupied a slot."""
+
+    rid: str
+    reason: str                      # e.g. "queue_full", "shed:fault_rate"
+    message: str = ""
+
+    @property
+    def status(self) -> int:
+        return status_for(self.reason)
+
+    def to_dict(self) -> dict:
+        return {
+            "id": self.rid,
+            "object": "rejection",
+            "status": self.status,
+            "reason": self.reason,
+            "message": self.message,
+        }
+
+
+def validate(req: CompletionRequest, *, vocab_size: int,
+             max_len: int) -> Rejection | None:
+    """Schema validation at the front door: malformed requests are
+    rejected with a 400-family reason before they touch admission, so
+    the scheduler and server only ever see well-formed work."""
+    prompt = np.asarray(req.prompt)
+    if prompt.ndim != 1 or prompt.size == 0:
+        return Rejection(req.rid, "invalid:prompt",
+                         f"prompt must be a non-empty 1-D token array, "
+                         f"got shape {prompt.shape}")
+    if req.max_tokens < 1:
+        return Rejection(req.rid, "invalid:max_tokens",
+                         f"max_tokens must be >= 1, got {req.max_tokens}")
+    if req.priority not in PRIORITY_CLASSES:
+        return Rejection(req.rid, "invalid:priority",
+                         f"unknown priority {req.priority!r} "
+                         f"(one of {PRIORITY_CLASSES})")
+    if req.deadline_s is not None and req.deadline_s <= 0:
+        return Rejection(req.rid, "invalid:deadline",
+                         f"deadline_s must be positive, "
+                         f"got {req.deadline_s}")
+    lo, hi = int(prompt.min()), int(prompt.max())
+    if lo < 0 or hi >= vocab_size:
+        return Rejection(req.rid, "invalid:tokens",
+                         f"token ids must be in [0, {vocab_size}), "
+                         f"got range [{lo}, {hi}]")
+    need = prompt.size + req.max_tokens - 1
+    if need > max_len:
+        return Rejection(req.rid, "invalid:length",
+                         f"prompt {prompt.size} + {req.max_tokens} "
+                         f"generated tokens need {need} cache entries "
+                         f"> max_len {max_len}")
+    return None

@@ -1,0 +1,218 @@
+"""Serve observability: bounded ring buffers and rolling percentiles.
+
+Everything the gateway measures goes through a fixed-size
+:class:`RingBuffer`, so a server that runs for days holds a *window* of
+recent samples instead of an ever-growing list — the same buffer also
+replaces ``Server``'s old unbounded ``tick_wall_s`` list.  Percentiles
+are therefore always *rolling*: ``p99`` means "p99 over the last
+``capacity`` samples", which is what an operator dashboard wants (a
+latency spike last Tuesday must not pollute today's numbers).
+
+:class:`GatewayMetrics` aggregates the serving signals the ROADMAP calls
+out — TTFT (submit -> first streamed token), per-token latency,
+throughput over the completion window, queue depth, slot and page-pool
+utilization, per-class queueing delay — plus outcome counters (completed
+/ rejected-by-reason / cancelled).  Two export formats:
+
+  * ``snapshot()``  — a JSON-able dict (the loadgen bench datapoint and
+    the CI artifact);
+  * ``to_prometheus()`` — the Prometheus text exposition format
+    (``# TYPE`` lines, ``{quantile="..."}`` summaries), so a scrape
+    endpoint needs nothing beyond ``str``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+__all__ = ["RingBuffer", "GatewayMetrics"]
+
+
+class RingBuffer:
+    """Fixed-capacity float ring: O(1) push, windowed percentiles.
+
+    Keeps the last ``capacity`` samples; ``total`` counts every push ever
+    (so rates and drop-free counters survive the window).  Percentile /
+    mean / max are computed over the current window only.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"ring capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._buf = np.zeros(capacity, np.float64)
+        self.total = 0                   # pushes ever, not just windowed
+
+    def push(self, value: float) -> None:
+        self._buf[self.total % self.capacity] = value
+        self.total += 1
+
+    def __len__(self) -> int:
+        return min(self.total, self.capacity)
+
+    def array(self) -> np.ndarray:
+        """The windowed samples (arbitrary order — fine for quantiles)."""
+        return self._buf[:len(self)]
+
+    def percentile(self, q: float) -> float:
+        if not len(self):
+            return 0.0
+        return float(np.percentile(self.array(), q))
+
+    def mean(self) -> float:
+        return float(self.array().mean()) if len(self) else 0.0
+
+    def max(self) -> float:
+        return float(self.array().max()) if len(self) else 0.0
+
+    def last(self) -> float:
+        if not self.total:
+            return 0.0
+        return float(self._buf[(self.total - 1) % self.capacity])
+
+
+class GatewayMetrics:
+    """Rolling serve metrics with JSON and Prometheus export."""
+
+    def __init__(self, window: int = 2048, *, clock=time.monotonic):
+        self.clock = clock
+        self.ttft_s = RingBuffer(window)
+        self.token_latency_s = RingBuffer(window)
+        self.queue_depth = RingBuffer(window)
+        self.slot_utilization = RingBuffer(window)
+        self.pool_utilization = RingBuffer(window)
+        self.queue_delay_s: dict[str, RingBuffer] = {}
+        self._qwindow = window
+        # completion window for rolling throughput: (timestamp, n_tokens)
+        self._done_t = RingBuffer(window)
+        self._done_tokens = RingBuffer(window)
+        # outcome counters (monotonic, survive the window)
+        self.submitted = 0
+        self.completed = 0
+        self.cancelled = 0
+        self.rejected: dict[str, int] = {}
+        self.tokens_streamed = 0
+
+    # -------------------------------------------------------- observations
+    def observe_submit(self) -> None:
+        self.submitted += 1
+
+    def observe_ttft(self, seconds: float) -> None:
+        self.ttft_s.push(seconds)
+
+    def observe_token_latency(self, seconds: float, n: int = 1) -> None:
+        for _ in range(n):
+            self.token_latency_s.push(seconds)
+        self.tokens_streamed += n
+
+    def observe_queue_delay(self, pclass: str, seconds: float) -> None:
+        if pclass not in self.queue_delay_s:
+            self.queue_delay_s[pclass] = RingBuffer(self._qwindow)
+        self.queue_delay_s[pclass].push(seconds)
+
+    def observe_completion(self, n_tokens: int, now: float | None = None):
+        self.completed += 1
+        self._done_t.push(self.clock() if now is None else now)
+        self._done_tokens.push(n_tokens)
+
+    def observe_rejection(self, reason: str) -> None:
+        self.rejected[reason] = self.rejected.get(reason, 0) + 1
+
+    def observe_cancel(self) -> None:
+        self.cancelled += 1
+
+    def sample(self, *, queue_depth: int, slot_utilization: float,
+               pool_utilization: float) -> None:
+        """Per-step gauges (queue depth, busy-slot and page-pool ratios)."""
+        self.queue_depth.push(queue_depth)
+        self.slot_utilization.push(slot_utilization)
+        self.pool_utilization.push(pool_utilization)
+
+    # ------------------------------------------------------------- exports
+    def throughput_tok_s(self, now: float | None = None) -> float:
+        """Generated-token rate over the completion window."""
+        n = len(self._done_t)
+        if n < 1:
+            return 0.0
+        t = self._done_t.array()
+        span = (self.clock() if now is None else now) - float(t.min())
+        if span <= 0:
+            return 0.0
+        return float(self._done_tokens.array().sum()) / span
+
+    def snapshot(self, now: float | None = None) -> dict:
+        """One JSON-able dict of everything — the bench datapoint shape."""
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "cancelled": self.cancelled,
+            "rejected": dict(sorted(self.rejected.items())),
+            "tokens_streamed": self.tokens_streamed,
+            "throughput_tok_s": round(self.throughput_tok_s(now), 1),
+            "ttft_ms": {
+                "p50": round(self.ttft_s.percentile(50) * 1e3, 3),
+                "p99": round(self.ttft_s.percentile(99) * 1e3, 3),
+            },
+            "token_latency_ms": {
+                "p50": round(self.token_latency_s.percentile(50) * 1e3, 3),
+                "p99": round(self.token_latency_s.percentile(99) * 1e3, 3),
+            },
+            "queue_delay_ms": {
+                cls: {"p50": round(rb.percentile(50) * 1e3, 3),
+                      "p99": round(rb.percentile(99) * 1e3, 3),
+                      "mean": round(rb.mean() * 1e3, 3)}
+                for cls, rb in sorted(self.queue_delay_s.items())
+            },
+            "queue_depth": {
+                "now": self.queue_depth.last(),
+                "p50": round(self.queue_depth.percentile(50), 1),
+                "max": self.queue_depth.max(),
+            },
+            "slot_utilization": round(self.slot_utilization.mean(), 3),
+            "pool_utilization": round(self.pool_utilization.mean(), 3),
+        }
+
+    def to_prometheus(self, now: float | None = None) -> str:
+        """Prometheus text exposition format (a scrapeable string)."""
+        P = "repro_gateway"
+        lines: list[str] = []
+
+        def summary(name: str, rb: RingBuffer, labels: str = "") -> None:
+            lines.append(f"# TYPE {P}_{name} summary")
+            for q in (0.5, 0.9, 0.99):
+                sep = "," if labels else ""
+                lines.append(
+                    f'{P}_{name}{{{labels}{sep}quantile="{q}"}} '
+                    f"{rb.percentile(q * 100):.6g}")
+            lines.append(f"{P}_{name}_count {rb.total}")
+
+        summary("ttft_seconds", self.ttft_s)
+        summary("token_latency_seconds", self.token_latency_s)
+        for cls, rb in sorted(self.queue_delay_s.items()):
+            summary("queue_delay_seconds", rb, labels=f'class="{cls}"')
+        lines.append(f"# TYPE {P}_requests_total counter")
+        lines.append(f'{P}_requests_total{{outcome="submitted"}} '
+                     f"{self.submitted}")
+        lines.append(f'{P}_requests_total{{outcome="completed"}} '
+                     f"{self.completed}")
+        lines.append(f'{P}_requests_total{{outcome="cancelled"}} '
+                     f"{self.cancelled}")
+        for reason, n in sorted(self.rejected.items()):
+            lines.append(
+                f'{P}_requests_total{{outcome="rejected",'
+                f'reason="{reason}"}} {n}')
+        lines.append(f"# TYPE {P}_tokens_streamed_total counter")
+        lines.append(f"{P}_tokens_streamed_total {self.tokens_streamed}")
+        lines.append(f"# TYPE {P}_throughput_tokens_per_second gauge")
+        lines.append(f"{P}_throughput_tokens_per_second "
+                     f"{self.throughput_tok_s(now):.6g}")
+        lines.append(f"# TYPE {P}_queue_depth gauge")
+        lines.append(f"{P}_queue_depth {self.queue_depth.last():.6g}")
+        lines.append(f"# TYPE {P}_slot_utilization gauge")
+        lines.append(f"{P}_slot_utilization "
+                     f"{self.slot_utilization.mean():.6g}")
+        lines.append(f"# TYPE {P}_pool_utilization gauge")
+        lines.append(f"{P}_pool_utilization "
+                     f"{self.pool_utilization.mean():.6g}")
+        return "\n".join(lines) + "\n"

@@ -63,6 +63,7 @@ import numpy as np
 
 import repro.configs as configs
 from repro.configs.base import reduce as reduce_cfg
+from repro.gateway.metrics import RingBuffer
 from repro.models import lm
 from repro.runtime.executor import DeviceQueue
 from repro.runtime.faults import FaultError, FaultPlan
@@ -98,6 +99,9 @@ class Request:
     # unshared tail) and tokens served from the prefix cache
     prefill_len: int = -1
     shared_len: int = 0
+    # streaming cursor: how many of ``out`` the gateway has polled;
+    # reset (with ``out``) by fault recovery so the stream restarts
+    streamed: int = 0
     # fault-tolerance bookkeeping
     deferrals: int = 0           # pool-dry admission deferrals so far
     recoveries: int = 0          # quarantine/re-prefill round trips
@@ -227,12 +231,16 @@ def _stuck_report(server: "Server", pending: list[Request],
             where = f"queued for re-admission ({r.recoveries} recoveries)"
         else:
             where = "awaiting a slot"
+        if r.t_seen is not None:
+            where += f", waiting {time.monotonic() - r.t_seen:.2f}s"
         stuck.append(f"rid {r.rid}: {len(r.out)}/{r.max_new} tokens, "
                      f"{where}")
     return (f"server did not converge in {max_iters} iterations\n"
             f"  in flight: {'; '.join(stuck) or 'none'}\n"
             f"  never admitted: "
             f"{[r.rid for r in pending] or 'none'}\n"
+            f"  requeue depth {len(requeue)}, oldest queued "
+            f"{server.oldest_requeue_age_s():.2f}s\n"
             f"  stats: {server.stats()}")
 
 
@@ -268,7 +276,8 @@ class Server:
                  paged: bool | None = None, page_size: int = 0,
                  pool_pages: int = 0, verify: bool = False,
                  policy: ServePolicy | None = None,
-                 inject: FaultPlan | str | None = None):
+                 inject: FaultPlan | str | None = None,
+                 tick_window: int = 2048):
         if microbatches < 1:
             raise ValueError(f"microbatches must be >= 1, got {microbatches}")
         if batch % microbatches:
@@ -333,7 +342,10 @@ class Server:
         self.prefill_tokens_skipped = 0
         self.deferred_admissions = 0
         self.peak_pages_in_use = 0
-        self.tick_wall_s: list[float] = []
+        # bounded ring (not a list): a long-running serve keeps a window
+        # of recent tick latencies, so memory is O(tick_window) and the
+        # stats() percentiles are rolling, not lifetime
+        self.tick_wall_s = RingBuffer(tick_window)
         self.straggler = StragglerMonitor()
         # fault tolerance state
         self.health = "healthy"      # healthy | degraded | shedding
@@ -353,6 +365,7 @@ class Server:
         self.failed = 0
         self.shed = 0
         self.rejected = 0
+        self.cancelled = 0
         self.deadline_retired = 0
         self.slots_quarantined = 0
 
@@ -411,6 +424,7 @@ class Server:
         self._release_slot(slot)
         self._quarantine(slot)
         req.out = []
+        req.streamed = 0         # the gateway's stream restarts too
         req.prefill_len, req.shared_len = -1, 0
         req.recoveries += 1
         self.recoveries += 1
@@ -623,6 +637,57 @@ class Server:
         self.slots[slot] = None
         self._release_slot(slot)
 
+    # --------------------------------------- gateway-facing narrow API
+    # The network front-end (repro.gateway) drives the server through
+    # exactly three verbs — submit / poll / cancel — so the serving loop,
+    # fault tolerance, and the --check oracle stay intact underneath it.
+    def submit(self, req: Request) -> bool:
+        """Try to place ``req`` now (one admission attempt).  Returns
+        False when no slot/pool space is currently available — the
+        caller requeues and retries a later step.  True means the
+        request was *consumed*: it is decoding in a slot, or it already
+        retired at admission with a ``finish_reason`` (shed, rejected,
+        finished) — check ``req.done``."""
+        return self.admit(req)
+
+    def poll(self, req: Request) -> list[int]:
+        """Tokens generated since the last poll (the streaming delta).
+
+        The cursor lives on the request, so one poller per request is
+        the contract.  Fault recovery resets both ``out`` and the
+        cursor: after a recovery, poll() re-streams from the first
+        token — callers detect the restart by the cursor moving
+        backwards (``repro.gateway`` emits a ``restart`` chunk)."""
+        new = list(req.out[req.streamed:])
+        req.streamed = len(req.out)
+        return new
+
+    def cancel(self, req: Request) -> list[int] | None:
+        """Cancel a submitted request mid-flight.
+
+        Returns the page ids its slot held (``[]`` for dense/queued
+        requests) so the caller can verify the release against the pool
+        trace, or ``None`` when the request is not in the server (never
+        submitted, or already retired).  A cancelled in-slot request
+        releases exactly the page references it held — the GWY004
+        invariant — and frees the slot immediately; partial output is
+        kept with ``finish_reason="cancelled"``."""
+        if req in self.requeue:           # awaiting re-admission: no slot
+            self.requeue.remove(req)
+            req.done, req.finish_reason = True, "cancelled"
+            self.cancelled += 1
+            return []
+        for i, s in enumerate(self.slots):
+            if s is req:
+                pages = list(self.slot_pages[i] or [])
+                shard = i // self.mb
+                if self.paged and self.pools[shard].trace is not None:
+                    self.pools[shard].note("cancel", rid=req.rid, slot=i)
+                self._retire(req, i, "cancelled")
+                self.cancelled += 1
+                return pages
+        return None
+
     # ----------------------------------------------------- tick helpers
     def _expire_pressure(self, *, all_holds: bool = False):
         for until, shard, pages in list(self._pressure_holds):
@@ -745,7 +810,7 @@ class Server:
                     self._append(req, i, int(nxt[j]))
             self.ticks += 1
             dt = time.perf_counter() - t0
-            self.tick_wall_s.append(dt)
+            self.tick_wall_s.push(dt)
             self.straggler.observe(self.clock, dt)
         self._update_health()
         return bool(inflight)
@@ -777,11 +842,23 @@ class Server:
     def pages_in_use(self) -> int:
         return sum(p.used_pages for p in self.pools) if self.paged else 0
 
+    def oldest_requeue_age_s(self, now: float | None = None) -> float:
+        """Age of the oldest request awaiting re-admission (0.0 when the
+        requeue is empty) — the stuck-request signal for recovered work
+        that has not made it back into a slot."""
+        seen = [r.t_seen for r in self.requeue if r.t_seen is not None]
+        if not seen:
+            return 0.0
+        return (time.monotonic() if now is None else now) - min(seen)
+
     def stats(self) -> dict:
         """Serving counters for benchmarks/tests: prefix-cache hit rate,
-        prefill work skipped, pool occupancy, tick latency percentiles,
-        and the fault/recovery/shed ledger."""
-        ticks = np.asarray(self.tick_wall_s or [0.0])
+        prefill work skipped, pool occupancy, windowed tick-latency
+        percentiles (over the last ``tick_window`` ticks), queue-level
+        state (requeue depth and oldest queued age), and the
+        fault/recovery/shed ledger."""
+        ticks = (self.tick_wall_s.array() if len(self.tick_wall_s)
+                 else np.asarray([0.0]))
         out = {
             "admitted": self.admitted,
             "ticks": self.ticks,
@@ -801,9 +878,14 @@ class Server:
             "failed_requests": self.failed,
             "shed": self.shed,
             "rejected": self.rejected,
+            "cancelled": self.cancelled,
             "deadline_retired": self.deadline_retired,
             "slots_quarantined": self.slots_quarantined,
             "straggler_ticks": len(self.straggler.flagged),
+            # queue-level state: requests that are the server's promise
+            # but currently hold no slot (recovery re-admission queue)
+            "requeue_depth": len(self.requeue),
+            "oldest_requeue_age_s": round(self.oldest_requeue_age_s(), 4),
         }
         if self.paged:
             out.update({

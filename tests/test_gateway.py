@@ -1,0 +1,495 @@
+"""Gateway tests: admission scheduling, token streaming, observability.
+
+The pure layers (schema validation, WDRR fairness, ring-buffer metrics,
+the GWY lifecycle checker) are tested against fake clocks and hand-built
+traces; the end-to-end tests drive a real :class:`Gateway` over a real
+``Server`` and hold the survivors to the same cross-layout oracle as the
+serving tests — plus the gateway's own contract: every submitted request
+terminal, streams reassembling to the final tokens, cancellations
+releasing exactly their held pages.
+"""
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.analysis import AnalysisError
+from repro.analysis.gateway import check_gateway_trace
+from repro.configs.base import reduce
+from repro.gateway import (
+    AdmissionScheduler, CompletionRequest, GatewayMetrics, Gateway,
+    PriorityClass, Rejection, RingBuffer, status_for, validate,
+)
+from repro.gateway.loadgen import run_loadgen
+from repro.launch.serve import Request, Server, solo_reference
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduce(configs.get("smollm_135m"))
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(n, seed=0, vocab=100):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, n).astype(np.int32)
+
+
+def _creq(n=4, seed=0, gen=4, **kw):
+    return CompletionRequest(_prompt(n, seed), gen, **kw)
+
+
+def _pump(gw, max_steps=400):
+    """Step until every submitted request is terminal."""
+    while gw._live or gw.sched.depth:
+        assert gw.steps < max_steps, gw._stuck_report(max_steps)
+        gw.step()
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ----------------------------------------------------------- ring buffer ----
+def test_ring_buffer_bounded_and_windowed():
+    rb = RingBuffer(4)
+    for v in range(10):
+        rb.push(float(v))
+    assert len(rb) == 4                     # bounded, not 10
+    assert rb.total == 10                   # but counts every push
+    assert sorted(rb.array()) == [6.0, 7.0, 8.0, 9.0]
+    assert rb.last() == 9.0
+    assert rb.max() == 9.0
+    # percentiles are over the WINDOW: old samples cannot pollute them
+    assert rb.percentile(0) == 6.0
+
+
+def test_server_tick_ring_is_bounded(smollm):
+    cfg, params = smollm
+    server = Server(cfg, params, batch=2, max_len=12, tick_window=4)
+    gw = Gateway(server)
+    for i in range(3):
+        gw.submit(_creq(n=3, seed=i, gen=6))
+    _pump(gw)
+    assert server.ticks > 4                 # more ticks than the window
+    assert len(server.tick_wall_s) == 4     # ring stayed bounded
+    assert server.tick_wall_s.total >= server.ticks
+    assert server.stats()["tick_p99_ms"] >= 0.0
+
+
+# ---------------------------------------------------------------- schema ----
+@pytest.mark.parametrize("req,reason", [
+    (CompletionRequest(np.zeros((0,), np.int32), 4), "invalid:prompt"),
+    (CompletionRequest(np.zeros((2, 2), np.int32), 4), "invalid:prompt"),
+    (_creq(gen=0), "invalid:max_tokens"),
+    (_creq(priority="vip"), "invalid:priority"),
+    (_creq(deadline_s=-1.0), "invalid:deadline"),
+    (CompletionRequest(np.array([5, 10_000], np.int32), 4),
+     "invalid:tokens"),
+    (_creq(n=30, gen=30), "invalid:length"),
+])
+def test_validate_rejects(req, reason):
+    req.rid = "r"
+    rej = validate(req, vocab_size=100, max_len=32)
+    assert rej is not None and rej.reason == reason
+    assert rej.status == 400
+
+
+def test_validate_accepts_well_formed():
+    req = _creq(n=8, gen=4)
+    assert validate(req, vocab_size=100, max_len=16) is None
+
+
+def test_status_families():
+    assert status_for("queue_full") == 429
+    assert status_for("defer_cap") == 429
+    assert status_for("shed:fault_rate") == 503
+    assert status_for("deadline") == 408
+    assert status_for("invalid:prompt") == 400
+    assert status_for("cancelled") == 499
+    assert status_for("mystery") == 500
+
+
+# ------------------------------------------------------------- admission ----
+def test_priority_ordering_under_contention():
+    sched = AdmissionScheduler()
+    for i in range(10):
+        sched.enqueue(_creq(priority="batch", rid=f"b{i}"))
+    for i in range(2):
+        sched.enqueue(_creq(priority="interactive", rid=f"i{i}"))
+    ready, rej = sched.dispatch(4)
+    assert not rej
+    # interactive (weight 4) goes first despite the deep batch backlog
+    assert [r.rid for r, _ in ready][:2] == ["i0", "i1"]
+    assert len(ready) == 4                  # quota-bounded
+
+
+def test_wdrr_shares_proportional_to_weights():
+    sched = AdmissionScheduler(max_admit_per_step=7)
+    for i in range(40):
+        for cls in ("interactive", "standard", "batch"):
+            sched.enqueue(_creq(priority=cls, rid=f"{cls}{i}"))
+    ready, _ = sched.dispatch(7)
+    by_cls = {}
+    for r, _ in ready:
+        by_cls[r.priority] = by_cls.get(r.priority, 0) + 1
+    # one full WDRR round at quota 7 is exactly the 4:2:1 weight split
+    assert by_cls == {"interactive": 4, "standard": 2, "batch": 1}
+
+
+def test_wdrr_starvation_bound_fractional_weight():
+    """A weight-1/4 class backlogged behind a hot weight-4 class must
+    dispatch at least once every ceil(1/weight)+1 single-slot rounds —
+    the deficit counter guarantees it can never be starved."""
+    sched = AdmissionScheduler((PriorityClass("interactive", 4.0),
+                                PriorityClass("batch", 0.25)),
+                               max_admit_per_step=1)
+    for i in range(100):
+        sched.enqueue(_creq(priority="interactive", rid=f"h{i}"))
+    for i in range(10):
+        sched.enqueue(_creq(priority="batch", rid=f"c{i}"))
+    gaps, last = [], 0
+    for step in range(1, 61):
+        ready, _ = sched.dispatch(1)
+        assert len(ready) == 1
+        if ready[0][0].priority == "batch":
+            gaps.append(step - last)
+            last = step
+    assert len(gaps) == 10                  # the cold class fully drains
+    assert max(gaps) <= 5                   # ceil(1/0.25) + 1
+
+
+def test_deadline_expired_rejected_at_dispatch():
+    clock = _Clock()
+    sched = AdmissionScheduler(clock=clock)
+    assert sched.enqueue(_creq(deadline_s=1.0, rid="dl")) is None
+    assert sched.enqueue(_creq(rid="ok")) is None
+    clock.t = 2.0                           # the deadline expires in queue
+    ready, rej = sched.dispatch(4)
+    assert [r.rid for r, _ in ready] == ["ok"]
+    assert [r.rid for r in rej] == ["dl"]
+    assert rej[0].reason == "deadline" and rej[0].status == 408
+
+
+def test_queue_full_is_429():
+    sched = AdmissionScheduler((PriorityClass("standard", 1.0,
+                                              max_depth=1),))
+    assert sched.enqueue(_creq(rid="a")) is None
+    rej = sched.enqueue(_creq(rid="b"))
+    assert rej is not None
+    assert rej.reason == "queue_full" and rej.status == 429
+
+
+def test_shedding_health_is_503():
+    sched = AdmissionScheduler()
+    rej = sched.enqueue(_creq(rid="a"), health="shedding",
+                        shed_reason="fault_rate")
+    assert rej is not None
+    assert rej.reason == "shed:fault_rate" and rej.status == 503
+
+
+def test_batch_quota_depth_aware_and_degraded():
+    sched = AdmissionScheduler(max_admit_per_step=4)
+    assert sched.batch_quota(8) == 0        # nothing queued
+    for i in range(2):
+        sched.enqueue(_creq(rid=f"r{i}"))
+    assert sched.batch_quota(8) == 2        # backlog-bounded
+    for i in range(2, 10):
+        sched.enqueue(_creq(rid=f"r{i}"))
+    assert sched.batch_quota(8) == 4        # max_admit_per_step-bounded
+    assert sched.batch_quota(3) == 3        # free-slot-bounded
+    assert sched.batch_quota(8, health="degraded") == 2   # halved
+    assert sched.batch_quota(0) == 0
+
+
+def test_scheduler_queue_level_stats():
+    clock = _Clock()
+    sched = AdmissionScheduler(clock=clock)
+    sched.enqueue(_creq(rid="a", priority="interactive"))
+    clock.t = 3.0
+    sched.enqueue(_creq(rid="b", priority="batch"))
+    st = sched.stats()
+    assert st["queued_by_class"] == {"interactive": 1, "standard": 0,
+                                     "batch": 1}
+    assert st["oldest_queued_age_s"] == 3.0
+
+
+# ------------------------------------------------------------ GWY checker ----
+def test_gwy_clean_trace():
+    trace = [
+        ("submit", "a", "standard"), ("admit", "a"),
+        ("retire", "a", "length"),
+        ("submit", "b", "batch"), ("reject", "b", "queue_full"),
+        ("submit", "c", "standard"), ("admit", "c"),
+        ("cancel", "c", (3, 4)),
+    ]
+    pool = [("event", "cancel", (("rid", "c"), ("slot", 0))),
+            ("release", (3, 4), "slot", False)]
+    assert check_gateway_trace(trace, pool_traces=[pool]) == []
+
+
+def test_gwy001_dropped_request():
+    diags = check_gateway_trace([("submit", "a", "standard")])
+    assert [d.rule for d in diags] == ["GWY001"]
+
+
+def test_gwy002_admitted_never_retired():
+    diags = check_gateway_trace([("submit", "a", "standard"),
+                                 ("admit", "a")])
+    assert [d.rule for d in diags] == ["GWY002"]
+    diags = check_gateway_trace([("submit", "a", "standard"),
+                                 ("admit", "a"), ("retire", "a", "")])
+    assert "GWY002" in [d.rule for d in diags]
+
+
+def test_gwy003_lifecycle_violations():
+    assert [d.rule for d in check_gateway_trace([("admit", "ghost"),
+                                                 ("retire", "ghost",
+                                                  "length")])
+            ][0] == "GWY003"
+    diags = check_gateway_trace([
+        ("submit", "a", "standard"), ("admit", "a"),
+        ("retire", "a", "length"), ("retire", "a", "length")])
+    assert [d.rule for d in diags] == ["GWY003"]
+    diags = check_gateway_trace([
+        ("submit", "a", "standard"), ("admit", "a"),
+        ("reject", "a", "queue_full")])
+    assert [d.rule for d in diags] == ["GWY003"]
+
+
+def test_gwy004_cancel_page_mismatch():
+    trace = [("submit", "a", "standard"), ("admit", "a"),
+             ("cancel", "a", (3, 4))]
+    short = [("event", "cancel", (("rid", "a"),)),
+             ("release", (3,), "slot", False)]
+    diags = check_gateway_trace(trace, pool_traces=[short])
+    assert [d.rule for d in diags] == ["GWY004"]
+    assert "leaks" in diags[0].message
+    diags = check_gateway_trace(trace, pool_traces=[[]])
+    assert [d.rule for d in diags] == ["GWY004"]  # no marker at all
+
+
+def test_gwy005_silent_rejection():
+    diags = check_gateway_trace([("submit", "a", "standard"),
+                                 ("reject", "a", "")])
+    assert [d.rule for d in diags] == ["GWY005"]
+
+
+# --------------------------------------------------------------- metrics ----
+def test_metrics_snapshot_and_prometheus():
+    m = GatewayMetrics(window=16)
+    m.observe_submit()
+    m.observe_ttft(0.010)
+    m.observe_token_latency(0.002, 3)
+    m.observe_queue_delay("interactive", 0.005)
+    m.observe_completion(3, now=1.0)
+    m.observe_rejection("queue_full")
+    m.observe_cancel()
+    m.sample(queue_depth=2, slot_utilization=0.5, pool_utilization=0.25)
+    snap = m.snapshot(now=2.0)
+    assert snap["submitted"] == 1 and snap["completed"] == 1
+    assert snap["rejected"] == {"queue_full": 1}
+    assert snap["ttft_ms"]["p50"] == 10.0
+    assert snap["token_latency_ms"]["p99"] == 2.0
+    assert "interactive" in snap["queue_delay_ms"]
+    assert snap["queue_depth"]["now"] == 2.0
+    text = m.to_prometheus(now=2.0)
+    assert "# TYPE repro_gateway_ttft_seconds summary" in text
+    assert 'repro_gateway_ttft_seconds{quantile="0.99"}' in text
+    assert ('repro_gateway_queue_delay_seconds{class="interactive",'
+            'quantile="0.5"}') in text
+    assert ('repro_gateway_requests_total{outcome="rejected",'
+            'reason="queue_full"} 1') in text
+    assert text.endswith("\n")
+
+
+# ------------------------------------------------------------ end-to-end ----
+def test_gateway_end_to_end_streams_bit_identical(smollm):
+    """Mixed-priority streaming traffic through the full stack: every
+    response bit-identical to its solo reference, streams reassemble to
+    the final tokens, usage wires cached_tokens to the prefix tree, and
+    the GWY + SRV checkers pass over the recorded traces."""
+    cfg, params = smollm
+    gen, max_len = 5, 18
+    server = Server(cfg, params, batch=2, max_len=max_len, verify=True)
+    gw = Gateway(server)
+    # page_size defaults to 8: a 9-token shared prefix spans one FULL
+    # page, so the prefix tree can actually serve it from cache
+    shared = _prompt(9, seed=3, vocab=cfg.vocab_size)
+    prompts = [np.concatenate([shared, _prompt(3, seed=i,
+                                               vocab=cfg.vocab_size)])
+               for i in range(5)]
+    rids = []
+    for i, p in enumerate(prompts):
+        prio = ("interactive", "standard", "batch")[i % 3]
+        out = gw.submit(CompletionRequest(p, gen, priority=prio,
+                                          stream=True))
+        assert isinstance(out, str)
+        rids.append(out)
+    _pump(gw)
+    assert gw.unaccounted() == []
+    assert len(gw.responses) == 5 and not gw.rejections
+    for rid, p in zip(rids, prompts):
+        resp = gw.responses[rid]
+        assert resp.finish_reason == "length"
+        ref = solo_reference(cfg, params, p, gen, max_len)
+        assert resp.tokens == ref, (rid, resp.tokens, ref)
+        # stream chunks concatenate to exactly the response tokens
+        toks = []
+        for ch in gw.chunks(rid):
+            toks = [] if ch.restart else toks
+            toks.extend(ch.tokens)
+        assert toks == resp.tokens
+        assert resp.usage.prompt_tokens == len(p)
+        assert resp.usage.generated_tokens == gen
+        assert resp.ttft_s is not None and resp.latency_s >= resp.ttft_s
+    # usage accounting reproduces the server's prefix-cache counter
+    cached = sum(r.usage.cached_tokens for r in gw.responses.values())
+    assert cached == server.prefill_tokens_skipped
+    assert cached > 0                       # the shared prefix was reused
+    gw.verify()                             # GWY lifecycle + SRV refcounts
+
+
+def test_gateway_cancel_releases_pages(smollm):
+    cfg, params = smollm
+    server = Server(cfg, params, batch=2, max_len=20, verify=True)
+    gw = Gateway(server)
+    rid = gw.submit(CompletionRequest(_prompt(6, vocab=cfg.vocab_size),
+                                      12))
+    keep = gw.submit(CompletionRequest(_prompt(6, seed=9,
+                                               vocab=cfg.vocab_size), 6))
+    for _ in range(3):
+        gw.step()
+    in_use = server.pages_in_use
+    assert gw.cancel(rid) is True
+    assert server.pages_in_use < in_use     # the slot's refs came back
+    resp = gw.responses[rid]
+    assert resp.finish_reason == "cancelled"
+    assert 0 < len(resp.tokens) < 12        # partial output kept
+    assert gw.cancel(rid) is False          # already terminal
+    _pump(gw)                               # the survivor finishes
+    assert gw.responses[keep].finish_reason == "length"
+    assert gw.unaccounted() == []
+    gw.verify()          # GWY004: cancel released exactly its held pages
+
+
+def test_gateway_cancel_while_queued_is_499(smollm):
+    cfg, params = smollm
+    server = Server(cfg, params, batch=2, max_len=16)
+    gw = Gateway(server)
+    # 2 slots; the 3rd+ requests stay queued until someone retires
+    rids = [gw.submit(CompletionRequest(
+        _prompt(4, seed=i, vocab=cfg.vocab_size), 6)) for i in range(4)]
+    gw.step()
+    queued = [r for r in rids if r in gw._live
+              and gw._live[r].sreq is None]
+    assert queued                           # backlog exists
+    assert gw.cancel(queued[0]) is True
+    rej = gw.rejections[queued[0]]
+    assert rej.reason == "cancelled" and rej.status == 499
+    _pump(gw)
+    assert gw.unaccounted() == []
+    gw.verify()
+
+
+def test_gateway_shedding_rejects_503(smollm):
+    cfg, params = smollm
+    server = Server(cfg, params, batch=2, max_len=12)
+    server.health, server._shed_reason = "shedding", "fault_rate"
+    gw = Gateway(server)
+    out = gw.submit(_creq(n=4, gen=2))
+    assert isinstance(out, Rejection)
+    assert out.reason == "shed:fault_rate" and out.status == 503
+    assert gw.unaccounted() == []
+    gw.verify()
+
+
+def test_gateway_stream_restart_after_fault_recovery(smollm):
+    """A fault recovery mid-stream voids the emitted tokens: the gateway
+    signals restart=True, re-streams from the first token, and the final
+    stream still equals the unfaulted solo reference."""
+    cfg, params = smollm
+    gen, max_len = 6, 16
+    server = Server(cfg, params, batch=2, max_len=max_len, verify=True)
+    gw = Gateway(server)
+    prompt = _prompt(5, seed=2, vocab=cfg.vocab_size)
+    rid = gw.submit(CompletionRequest(prompt, gen, stream=True))
+    while gw._live[rid].n_polled < 2:       # some tokens already out
+        gw.step()
+    sreq = gw._live[rid].sreq
+    slot = server.slots.index(sreq)
+    server._recover(sreq, slot, "test_fault")   # inject the recovery
+    _pump(gw)
+    resp = gw.responses[rid]
+    assert resp.finish_reason == "length"
+    chunks = gw.chunks(rid)
+    assert any(ch.restart for ch in chunks)     # the stream restarted
+    toks = []
+    for ch in chunks:
+        toks = [] if ch.restart else toks
+        toks.extend(ch.tokens)
+    ref = solo_reference(cfg, params, prompt, gen, max_len)
+    assert toks == resp.tokens == ref
+    gw.verify()
+
+
+def test_gateway_verify_catches_seeded_violation(smollm):
+    cfg, params = smollm
+    server = Server(cfg, params, batch=2, max_len=12)
+    gw = Gateway(server)
+    rid = gw.submit(_creq(n=4, gen=2))
+    _pump(gw)
+    assert gw.trace is not None
+    gw.verify()                             # clean first
+    gw.trace.append(("retire", rid, "length"))   # double terminal
+    with pytest.raises(AnalysisError, match="GWY003"):
+        gw.verify()
+
+
+def test_gateway_drain_stuck_report_has_queue_state(smollm):
+    cfg, params = smollm
+    server = Server(cfg, params, batch=2, max_len=12)
+    gw = Gateway(server)
+    gw.submit(_creq(n=4, gen=2, priority="interactive"))
+    with pytest.raises(RuntimeError) as e:
+        gw.drain(max_steps=0)
+    assert "queued by class" in str(e.value)
+    assert "interactive" in str(e.value)
+    _pump(gw)                               # now actually finish it
+
+
+def test_gateway_stats_shape(smollm):
+    cfg, params = smollm
+    server = Server(cfg, params, batch=2, max_len=12)
+    gw = Gateway(server)
+    gw.submit(_creq(n=4, gen=2))
+    _pump(gw)
+    st = gw.stats()
+    assert st["submitted"] == 1 and st["unaccounted"] == 0
+    assert st["admission"]["queued_by_class"]["standard"] == 0
+    assert "ttft_ms" in st["metrics"]
+    assert "requeue_depth" in st["server"]
+    assert "oldest_requeue_age_s" in st["server"]
+    assert "cancelled" in st["server"]
+
+
+# ---------------------------------------------------------------- loadgen ----
+def test_loadgen_small_closed_loop_fully_accounted(smollm):
+    cfg, params = smollm
+    server = Server(cfg, params, batch=2, max_len=26, verify=True)
+    gw, point = run_loadgen(server, requests=12, arrival="bursty",
+                            pool=6, prompt_len=8, shared_prefix=4,
+                            cancel_rate=0.2, seed=1, check=True,
+                            verbose=False)
+    assert gw.unaccounted() == []
+    assert point["requests"] == 12
+    assert sum(point["outcomes"].values()) == 12
+    assert point["survivors"] >= 1
+    assert point["tokens"] > 0
+    gw.verify()
