@@ -7,6 +7,9 @@
   micro  — kernel micro timings (CSV: name,us_per_call,derived)
   serve  — continuous-batching throughput, dense vs paged+prefix-reuse
   gateway — closed-loop loadgen through the admission gateway
+  disagg — colocated vs disaggregated prefill/decode (tick latency,
+           handoff counters, prefill/decode overlap); appends a
+           datapoint to BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -57,6 +60,18 @@ def main() -> None:
             print(f"serve.{r['layout']}_mb{r['microbatches']},,"
                   f"tok_per_s={r['tok_per_s']};ticks={r['ticks']};"
                   f"dispatches={r['dispatches']};"
+                  f"p99_ms={r['tick_p99_ms']}{extra}")
+    if which in ("all", "disagg"):
+        from benchmarks import serve_bench
+        point = serve_bench.run_disagg(
+            verbose=False, out_json=serve_bench._JSON)
+        for r in point["rows"]:
+            extra = (f";overlap={r['prefill_decode_overlap']};"
+                     f"transfers={r['transfers']}"
+                     if r["mode"] == "disagg" else "")
+            print(f"disagg.{r['mode']}_mb{r['microbatches']},,"
+                  f"tok_per_s={r['tok_per_s']};ticks={r['ticks']};"
+                  f"p50_ms={r['tick_p50_ms']};"
                   f"p99_ms={r['tick_p99_ms']}{extra}")
     if which in ("all", "gateway"):
         import jax

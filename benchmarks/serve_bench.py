@@ -149,5 +149,103 @@ def run(arch: str = "smollm_135m", *, batch: int = 4, prompt_len: int = 16,
     return rows
 
 
+def run_disagg(arch: str = "smollm_135m", *, batch: int = 4,
+               prompt_len: int = 16, gen: int = 16, requests: int = 12,
+               stagger: int = 1, shared_prefix: int = 9,
+               microbatches: int = 2, prefill_slots: int = 2,
+               check: bool = False, verbose: bool = True,
+               out_json: str | None = None) -> dict:
+    """Colocated vs disaggregated prefill/decode on the same staggered
+    shared-prefix workload.
+
+    The colocated row interleaves batched prefills with the decode
+    lockstep (a new admission stalls every resident request's next
+    token); the disagg row runs prefills on a dedicated worker and only
+    pays a page migration + table install on the decode side, so decode
+    tick latency stays flat under admission churn.  Reported per mode:
+    decode tick p50/p99 and throughput; the disagg row adds the handoff
+    counters and ``prefill_decode_overlap`` — the fraction of decode
+    ticks that also completed a prefill (prefill compute hidden behind
+    other requests' decode steps).  With ``out_json`` the datapoint is
+    appended under the ``"disagg"`` key of the benchmark JSON
+    (preserving the serve/gateway entries)."""
+    from repro.launch.disagg import DisaggServer
+
+    cfg = reduce_cfg(configs.get(arch))
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    max_len = prompt_len + gen + 8
+    prompts = _workload(cfg, requests, prompt_len, shared_prefix)
+    rows = []
+    for mode in ("colocated", "disagg"):
+        if mode == "disagg":
+            server = DisaggServer(cfg, params, batch=batch,
+                                  max_len=max_len,
+                                  microbatches=microbatches,
+                                  prefill_slots=prefill_slots)
+        else:
+            server = Server(cfg, params, batch=batch, max_len=max_len,
+                            microbatches=microbatches, paged=True)
+        pending = [Request(i, p, gen, arrival=i * stagger)
+                   for i, p in enumerate(prompts)]
+        t0 = time.perf_counter()
+        done = drain(server, pending)
+        dt = time.perf_counter() - t0
+        if check:
+            for r in done:
+                ref = solo_reference(cfg, params, r.prompt, gen, max_len)
+                assert r.out == ref, (mode, r.rid, r.out, ref)
+        st = server.stats()
+        total = sum(len(r.out) for r in done)
+        row = {
+            "mode": mode,
+            "microbatches": microbatches,
+            "requests": len(done),
+            "tokens": total,
+            "wall_s": round(dt, 3),
+            "tok_per_s": round(total / dt, 1),
+            "ticks": server.ticks,
+            "tick_p50_ms": st["tick_p50_ms"],
+            "tick_p99_ms": st["tick_p99_ms"],
+            "prefill_tokens": st["prefill_tokens"],
+            "prefill_tokens_skipped": st["prefill_tokens_skipped"],
+            "hit_rate": st["hit_rate"],
+        }
+        if mode == "disagg":
+            row.update({k: st[k] for k in
+                        ("prefill_slots", "transfers", "pages_transferred",
+                         "overlap_ticks", "prefill_decode_overlap")})
+        rows.append(row)
+        if verbose:
+            extra = (f", overlap={row['prefill_decode_overlap']}"
+                     f" ({row['transfers']} handoffs)"
+                     if mode == "disagg" else "")
+            print(f"serve {mode} mb={microbatches}: {total} tok in "
+                  f"{row['wall_s']}s ({row['tok_per_s']} tok/s, "
+                  f"p50 {row['tick_p50_ms']}ms, "
+                  f"p99 {row['tick_p99_ms']}ms{extra})")
+    point = {
+        "arch": arch,
+        "date": time.strftime("%Y-%m-%d"),
+        "workload": {"batch": batch, "prompt_len": prompt_len, "gen": gen,
+                     "requests": requests, "stagger": stagger,
+                     "shared_prefix": shared_prefix, "max_len": max_len,
+                     "checked": check},
+        "rows": rows,
+    }
+    if out_json:
+        payload: dict = {}
+        if os.path.exists(out_json):
+            with open(out_json) as f:
+                payload = json.load(f)
+        payload.setdefault("disagg", []).append(point)
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        if verbose:
+            print(f"appended disagg datapoint to {out_json}")
+    return point
+
+
 if __name__ == "__main__":
     run(check=True, out_json=_JSON)
+    run_disagg(check=True, out_json=_JSON)

@@ -16,7 +16,10 @@ four things that can silently corrupt a run:
     eviction of referenced pages);
   * :mod:`repro.analysis.gateway`  — gateway request-lifecycle
     verification (every submission terminal, admitted requests retire
-    with a reason, cancellations release exactly their held pages).
+    with a reason, cancellations release exactly their held pages);
+  * :mod:`repro.analysis.handoff`  — DSG handoff totality for the
+    disaggregated server (every prefilled page reaches exactly one
+    decode pool or is released; no cross-pool double ownership).
 
 Entry points: ``analyze_pipeline`` (used by ``emit(verify=True)``),
 ``verify_pool`` (used by ``Server(verify=True)``), ``analyze_config``
@@ -29,6 +32,7 @@ from repro.analysis.diagnostics import (
     AnalysisError, Diagnostic, Report, Severity,
 )
 from repro.analysis.gateway import check_gateway_trace
+from repro.analysis.handoff import check_handoff_trace
 from repro.analysis.hazards import check_schedule
 from repro.analysis.memplan import check_allocation
 from repro.analysis.passes import (
@@ -42,5 +46,6 @@ __all__ = [
     "PipelineArtifacts", "analyze_pipeline", "register_pass",
     "check_schedule", "check_allocation", "check_streamers",
     "check_serving_trace", "verify_pool", "check_gateway_trace",
+    "check_handoff_trace",
     "analyze_config", "check_config", "exercise_serving",
 ]

@@ -1,0 +1,213 @@
+"""Checker 6 — DSG: handoff totality for disaggregated prefill/decode.
+
+Replays a :class:`repro.serving.handoff.HandoffLedger` — the journal of
+every request's KV page custody across the prefill pool and the per-shard
+decode pools — and proves the handoff protocol total: every page a
+prefill wrote reaches exactly one decode pool or is explicitly released,
+every migrated page lands in a decode page table, and no decode page is
+ever owned by two requests at once.
+
+Because the prefill pool's prefix tree shares physical pages across
+prompts, the same source page legitimately appears in many requests'
+journeys; the interpreter therefore tracks per-request *incarnations*
+(one per ``prefilled`` event — fault recovery re-prefills open a new
+incarnation), not physical pages.
+
+  * **DSG000** malformed ledger event (unknown kind, or a transfer whose
+    source and destination page runs differ in length);
+  * **DSG001** stranded prefill: a prefilled page neither transferred
+    nor abandoned by end of trace (or a re-prefill opened while the
+    previous incarnation still held uncovered pages) — the prefill-pool
+    exhaustion failure mode;
+  * **DSG002** double handoff: an incarnation transfers or abandons a
+    source page it does not (or no longer) hold(s) — custody of one
+    prefilled page claimed twice;
+  * **DSG003** transfer/abandon/install for a request with no open
+    prefill incarnation — custody moved for pages never prefilled;
+  * **DSG004** migrated-but-never-installed: pages a transfer moved into
+    a decode pool that no ``installed`` page table ever mapped — KV
+    bytes paid for and unreachable;
+  * **DSG005** cross-pool double ownership: a decode-side (shard, page)
+    owned by two live requests at once, or retired while not owned.
+
+``check_handoff_trace`` is pure over the event list so tests can feed
+hand-built ledgers with injected violations; ``live_rids`` names requests
+still mid-flight (pending prefills at verify time), exempting their
+incarnations from the end-of-trace totality accounting.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.analysis.diagnostics import Diagnostic, Severity
+
+__all__ = ["check_handoff_trace"]
+
+PASS = "handoff"
+
+
+def _err(rule: str, msg: str, **anchor: object) -> Diagnostic:
+    return Diagnostic(rule, Severity.ERROR, msg, dict(anchor), PASS)
+
+
+class _Incarnation:
+    """One prefilled->settled journey of a request's pages."""
+
+    __slots__ = ("uncovered", "transferred", "installed", "op")
+
+    def __init__(self, src_pages: Sequence[int], op: int):
+        self.uncovered = set(src_pages)   # src pages awaiting custody move
+        self.transferred: dict[int, set[int]] = {}   # shard -> dst pages
+        self.installed: dict[int, set[int]] = {}     # shard -> dst pages
+        self.op = op
+
+
+def check_handoff_trace(
+    events: Sequence[tuple],
+    *,
+    live_rids: Iterable[str] = (),
+) -> list[Diagnostic]:
+    """Replay a handoff ledger through the abstract custody machine."""
+    diags: list[Diagnostic] = []
+    incs: dict[str, list[_Incarnation]] = {}
+    # (shard, dst page) -> owning rid, from transfer/install until retire
+    custody: dict[tuple[int, int], str] = {}
+    live = set(live_rids)
+
+    def current(rid: str) -> _Incarnation | None:
+        lst = incs.get(rid)
+        return lst[-1] if lst else None
+
+    for opidx, ev in enumerate(events):
+        kind = ev[0]
+        if kind == "prefilled":
+            _, rid, src = ev
+            cur = current(rid)
+            if cur is not None and cur.uncovered:
+                diags.append(_err(
+                    "DSG001",
+                    f"op {opidx}: re-prefill of {rid} while its previous "
+                    f"incarnation still holds pages "
+                    f"{sorted(cur.uncovered)} — stranded prefill pages",
+                    rid=rid, op=opidx))
+            incs.setdefault(rid, []).append(_Incarnation(src, opidx))
+        elif kind == "transferred":
+            _, rid, src, shard, dst = ev
+            if len(src) != len(dst):
+                diags.append(_err(
+                    "DSG000",
+                    f"op {opidx}: transfer of {len(src)} prefill pages "
+                    f"into {len(dst)} decode pages for {rid}",
+                    rid=rid, op=opidx))
+            cur = current(rid)
+            if cur is None:
+                diags.append(_err(
+                    "DSG003",
+                    f"op {opidx}: transfer for {rid} which has no open "
+                    f"prefill incarnation",
+                    rid=rid, op=opidx))
+            else:
+                for p in src:
+                    if p not in cur.uncovered:
+                        diags.append(_err(
+                            "DSG002",
+                            f"op {opidx}: {rid} transferred prefill page "
+                            f"{p} it does not hold — double handoff",
+                            rid=rid, page=int(p), op=opidx))
+                cur.uncovered.difference_update(src)
+                cur.transferred.setdefault(shard, set()).update(dst)
+            for d in dst:
+                owner = custody.get((shard, d))
+                if owner is not None and owner != rid:
+                    diags.append(_err(
+                        "DSG005",
+                        f"op {opidx}: decode page {d} on shard {shard} "
+                        f"transferred to {rid} while owned by {owner} — "
+                        f"cross-pool double ownership",
+                        rid=rid, page=int(d), shard=shard, op=opidx))
+                custody[(shard, d)] = rid
+        elif kind == "abandoned":
+            _, rid, src, reason = ev
+            cur = current(rid)
+            if cur is None:
+                diags.append(_err(
+                    "DSG003",
+                    f"op {opidx}: abandon ({reason}) for {rid} which has "
+                    f"no open prefill incarnation",
+                    rid=rid, op=opidx))
+                continue
+            for p in src:
+                if p not in cur.uncovered:
+                    diags.append(_err(
+                        "DSG002",
+                        f"op {opidx}: {rid} abandoned ({reason}) prefill "
+                        f"page {p} it does not hold",
+                        rid=rid, page=int(p), op=opidx))
+            cur.uncovered.difference_update(src)
+        elif kind == "installed":
+            _, rid, shard, dst = ev
+            cur = current(rid)
+            if cur is None:
+                diags.append(_err(
+                    "DSG003",
+                    f"op {opidx}: install for {rid} which was never "
+                    f"prefilled",
+                    rid=rid, shard=shard, op=opidx))
+                continue
+            cur.installed.setdefault(shard, set()).update(dst)
+            for d in dst:
+                owner = custody.get((shard, d))
+                if owner is None:
+                    # fresh generation pages: custody starts at install
+                    custody[(shard, d)] = rid
+                elif owner != rid:
+                    diags.append(_err(
+                        "DSG005",
+                        f"op {opidx}: decode page {d} on shard {shard} "
+                        f"installed for {rid} while owned by {owner} — "
+                        f"cross-pool double ownership",
+                        rid=rid, page=int(d), shard=shard, op=opidx))
+        elif kind == "retired":
+            _, rid, shard, dst = ev
+            for d in dst:
+                owner = custody.pop((shard, d), None)
+                if owner is None:
+                    diags.append(_err(
+                        "DSG005",
+                        f"op {opidx}: decode page {d} on shard {shard} "
+                        f"retired while not owned by any request",
+                        page=int(d), shard=shard, op=opidx))
+                elif rid is not None and owner != rid:
+                    diags.append(_err(
+                        "DSG005",
+                        f"op {opidx}: decode page {d} on shard {shard} "
+                        f"retired by {rid} but owned by {owner}",
+                        rid=rid, page=int(d), shard=shard, op=opidx))
+        else:
+            diags.append(_err(
+                "DSG000",
+                f"op {opidx}: unknown ledger event {kind!r}",
+                op=opidx))
+
+    # ---- end-of-trace totality accounting
+    for rid, lst in incs.items():
+        if rid in live:
+            lst = lst[:-1]   # the in-flight incarnation may be half-done
+        for inc in lst:
+            if inc.uncovered:
+                diags.append(_err(
+                    "DSG001",
+                    f"{rid}: prefilled pages {sorted(inc.uncovered)} "
+                    f"(op {inc.op}) never transferred to a decode pool "
+                    f"nor released — stranded prefill custody",
+                    rid=rid, op=inc.op))
+            for shard, moved in inc.transferred.items():
+                missing = moved - inc.installed.get(shard, set())
+                if missing:
+                    diags.append(_err(
+                        "DSG004",
+                        f"{rid}: decode pages {sorted(missing)} migrated "
+                        f"to shard {shard} but never installed in its "
+                        f"page table — unreachable KV",
+                        rid=rid, shard=shard, op=inc.op))
+    return diags

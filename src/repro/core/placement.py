@@ -8,22 +8,77 @@ cycle count for that node's actual shape** (compute AND streaming, via
 ``Task.cycles``) — a wide datapath starved by narrow ports loses to a
 slower datapath that keeps the node stream-fed.  Accelerators with fewer
 streamer ports than the node moves values cannot carry it and are not
-candidates.
+candidates.  Exact cycle ties break toward the accelerator that ties up
+the fewest streamer ports, so port-rich datapaths stay free for nodes
+that actually need the bandwidth.
+
+Phase-aware mode (``phase=``) refines the ranking with the roofline
+machinery from :mod:`repro.roofline.analysis`: each node's arithmetic
+intensity (ops per operand byte) is compared against each candidate
+datapath's machine balance (ops per streamed byte per cycle).  A
+``"prefill"``/``"compute"`` phase prefers FLOP-rich datapaths among
+near-equals, a ``"decode"``/``"bandwidth"`` phase prefers stream-rich
+ones, and ``"auto"`` classifies every node individually — exactly the
+compute-bound-batched-prefill vs bandwidth-bound-decode split the
+disaggregated server routes through.  ``explain=True`` additionally
+returns the full per-node ranked candidate table for debugging.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal, overload
 
 from repro.core.accelerator import AcceleratorSpec, Task, assign_ports
 from repro.core.cluster import Cluster
 from repro.core.costmodel import ClusterHw
 from repro.core.graph import Graph, OpNode
+from repro.roofline.analysis import (arithmetic_intensity, classify_phase,
+                                     machine_balance)
 
-__all__ = ["place"]
+__all__ = ["Candidate", "place", "stream_bytes_per_cycle"]
+
+# Scalar-core LSU fallback bandwidth — must match ``Task.cycles``'s
+# streamer-less branch (8 bytes per cycle through the load/store unit).
+_HOST_LSU_BYTES_PER_CYCLE = 8.0
+
+_PHASE_ALIAS = {"prefill": "compute", "decode": "bandwidth"}
+_PHASES = ("compute", "bandwidth", "prefill", "decode", "auto")
 
 
-def _node_cycles(graph: Graph, node: OpNode, spec: AcceleratorSpec,
-                 hw: ClusterHw) -> int | None:
-    """Total cost-model cycles for the whole (untiled) node on ``spec``,
-    or None when the accelerator cannot carry the node's operands."""
+def stream_bytes_per_cycle(spec: AcceleratorSpec) -> float:
+    """Aggregate streaming bandwidth of a datapath, bytes per cycle.
+
+    All ports run concurrently, each delivering one block per
+    ``ceil(block_bytes * 8 / port_bits)`` cycles (``Streamer.stream_cycles``);
+    a streamer-less spec moves data through the host LSU at 8 B/cycle.
+    """
+    if not spec.streamers:
+        return _HOST_LSU_BYTES_PER_CYCLE
+    return sum(s.block_bytes / max(s.stream_cycles(1), 1)
+               for s in spec.streamers)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One (node, accelerator) ranking entry — the explain-table row."""
+
+    accel: str
+    cycles: int           # cost-model total for this node's actual shape
+    compute_cycles: int
+    stream_cycles: int
+    ports: int            # streamer ports tied up while the node runs
+    stream_bw: float      # datapath bytes per cycle (all ports concurrent)
+    balance: float        # ops/byte ridge point of this datapath
+    matched: bool         # node's boundness class == datapath's strength
+
+    def row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _candidate(graph: Graph, node: OpNode, spec: AcceleratorSpec,
+               hw: ClusterHw, intensity: float) -> Candidate | None:
+    """Cost-model entry for the whole (untiled) node on ``spec``, or None
+    when the accelerator cannot carry the node's operands."""
     operand_bytes = [graph.value_spec(i).nbytes for i in node.inputs] \
         + [node.out.nbytes]
     try:
@@ -39,7 +94,49 @@ def _node_cycles(graph: Graph, node: OpNode, spec: AcceleratorSpec,
         n_ops=max(1, node.n_ops),
         stream_bytes=sum(operand_bytes),
     )
-    return task.cycles(spec, hw)["total"]
+    cyc = task.cycles(spec, hw)
+    bw = stream_bytes_per_cycle(spec)
+    balance = machine_balance(spec.cost.ops_per_cycle, bw)
+    return Candidate(
+        accel=spec.name,
+        cycles=cyc["total"],
+        compute_cycles=cyc["compute"],
+        stream_cycles=cyc["stream"],
+        ports=len(spec.streamers),
+        stream_bw=bw,
+        balance=balance,
+        matched=classify_phase(intensity, balance) == "compute",
+    )
+
+
+def _rank_key(phase: str | None):
+    """Sort key for candidates under a resolved phase (never ``"auto"``).
+
+    Cycles always dominate; the phase only arbitrates among near-equals.
+    A compute phase then prefers datapaths the node stays compute-bound
+    on (FLOP-rich relative to its traffic), a bandwidth phase prefers
+    raw port bandwidth, and everything falls through to the fewest-ports
+    tie-break.
+    """
+    if phase == "compute":
+        # fewer compute cycles for the same op count == FLOP-richer datapath
+        return lambda c: (c.cycles, not c.matched, c.compute_cycles, c.ports)
+    if phase == "bandwidth":
+        return lambda c: (c.cycles, -c.stream_bw, c.ports)
+    return lambda c: (c.cycles, c.ports)
+
+
+@overload
+def place(graph: Graph, cluster: Cluster, *,
+          disabled: frozenset[str] = ..., phase: str | None = ...,
+          explain: Literal[False] = ...) -> dict[str, str]: ...
+
+
+@overload
+def place(graph: Graph, cluster: Cluster, *,
+          disabled: frozenset[str] = ..., phase: str | None = ...,
+          explain: Literal[True]) -> tuple[dict[str, str],
+                                           dict[str, dict[str, Any]]]: ...
 
 
 def place(
@@ -47,26 +144,56 @@ def place(
     cluster: Cluster,
     *,
     disabled: frozenset[str] = frozenset(),
-) -> dict[str, str]:
+    phase: str | None = None,
+    explain: bool = False,
+) -> dict[str, str] | tuple[dict[str, str], dict[str, dict[str, Any]]]:
     """Return {node name -> accelerator name}.
 
     ``disabled`` lets experiments ablate accelerators (the Fig. 8 ladder:
     RISC-V only -> +GeMM -> +maxpool) without touching the cluster.
+
+    ``phase`` switches on roofline-aware ranking: ``"prefill"``/
+    ``"compute"`` routes toward FLOP-rich datapaths, ``"decode"``/
+    ``"bandwidth"`` toward stream-rich ones, ``"auto"`` classifies each
+    node by its own arithmetic intensity against the fastest candidate's
+    machine balance.  ``explain=True`` returns ``(placement, table)``
+    where ``table[node]`` holds the node's intensity, resolved phase and
+    the ranked :class:`Candidate` rows.
     """
+    if phase is not None and phase not in _PHASES:
+        raise ValueError(f"unknown phase {phase!r}; pick from {_PHASES}")
     placement: dict[str, str] = {}
+    table: dict[str, dict[str, Any]] = {}
     for node in graph.topo():
-        ranked: list[tuple[int, AcceleratorSpec]] = []
+        n_bytes = sum(graph.value_spec(i).nbytes for i in node.inputs) \
+            + node.out.nbytes
+        intensity = arithmetic_intensity(max(1, node.n_ops), n_bytes)
+        cands: list[Candidate] = []
         for a in cluster.supporting(node.kernel):
             if a.name in disabled:
                 continue
-            cycles = _node_cycles(graph, node, a, cluster.hw)
-            if cycles is not None:
-                ranked.append((cycles, a))
-        if not ranked:
+            cand = _candidate(graph, node, a, cluster.hw, intensity)
+            if cand is not None:
+                cands.append(cand)
+        if not cands:
             raise ValueError(
                 f"no device supports kernel {node.kernel!r} for node "
                 f"{node.name!r} (and no host fallback registered)"
             )
-        # the fastest datapath *for this node* wins (stable on ties)
-        placement[node.name] = min(ranked, key=lambda ca: ca[0])[1].name
+        node_phase = _PHASE_ALIAS.get(phase, phase) if phase else None
+        if node_phase == "auto":
+            # classify against the ridge of the cycle-fastest candidate:
+            # is this node compute- or bandwidth-bound where it would run?
+            fastest = min(cands, key=lambda c: (c.cycles, c.ports))
+            node_phase = classify_phase(intensity, fastest.balance)
+        ranked = sorted(cands, key=_rank_key(node_phase))
+        placement[node.name] = ranked[0].accel
+        if explain:
+            table[node.name] = {
+                "intensity": round(intensity, 4),
+                "phase": node_phase,
+                "candidates": [c.row() for c in ranked],
+            }
+    if explain:
+        return placement, table
     return placement

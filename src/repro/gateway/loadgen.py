@@ -304,6 +304,12 @@ def main(argv=None):
                          "stream reassembly, and usage accounting")
     ap.add_argument("--verify", action="store_true",
                     help="record traces; run GWY + SRV checkers at drain")
+    ap.add_argument("--disagg", action="store_true",
+                    help="serve through the disaggregated prefill/decode "
+                         "runtime (repro.launch.disagg) — adds the DSG "
+                         "handoff checker under --verify")
+    ap.add_argument("--prefill-slots", type=int, default=2,
+                    help="concurrent in-flight prefills (--disagg only)")
     ap.add_argument("--out-json", type=str, default=None,
                     help="append the datapoint under this JSON's "
                          "'gateway' key (e.g. benchmarks/BENCH_serve.json)")
@@ -316,9 +322,16 @@ def main(argv=None):
         cfg = reduce_cfg(cfg)
     params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
     gen_max = max(c.gen for c in DEFAULT_MIX)
-    server = Server(cfg, params, batch=args.batch,
-                    max_len=args.prompt_len + gen_max + 8,
-                    microbatches=args.microbatches, verify=args.verify)
+    server_cls = Server
+    server_kw = {}
+    if args.disagg:
+        from repro.launch.disagg import DisaggServer
+        server_cls = DisaggServer
+        server_kw["prefill_slots"] = args.prefill_slots
+    server = server_cls(cfg, params, batch=args.batch,
+                        max_len=args.prompt_len + gen_max + 8,
+                        microbatches=args.microbatches, verify=args.verify,
+                        **server_kw)
     gw, point = run_loadgen(
         server, requests=args.requests, arrival=args.arrival,
         pool=args.pool, prompt_len=args.prompt_len,
@@ -327,8 +340,9 @@ def main(argv=None):
         seed=args.seed, check=args.check)
     if args.verify:
         gw.verify()
-        print("verify: GWY gateway-lifecycle + SRV serving-invariant "
-              "checkers passed")
+        extra = " + DSG handoff" if args.disagg else ""
+        print(f"verify: GWY gateway-lifecycle + SRV serving-invariant"
+              f"{extra} checkers passed")
     if args.snapshot:
         with open(args.snapshot, "w") as f:
             json.dump(gw.metrics.snapshot(), f, indent=2)

@@ -37,6 +37,12 @@ pressure instead of deferring silently.  ``--inject`` arms a seeded
 be exercised deterministically — with ``--check`` still holding every
 *surviving* request bit-identical to its solo reference.
 
+``--disagg`` swaps in the **disaggregated** prefill/decode runtime
+(:mod:`repro.launch.disagg`): prompts prefill on a dedicated
+compute-side worker with its own page pool and prefix tree, and their
+KV pages are migrated + ownership-transferred into the decode shards'
+pools — same narrow API, same oracle, phase-matched placement.
+
 ``microbatches > 1`` splits the slot pool into shards, each with its own
 cache/pool/tree, and decodes them through the asynchronous pipeline: every
 active shard's decode step is dispatched fire-and-forget on a
@@ -70,8 +76,8 @@ from repro.runtime.faults import FaultError, FaultPlan
 from repro.runtime.supervisor import StragglerMonitor
 from repro.serving import PagePool, PrefixTree
 
-__all__ = ["Server", "ServePolicy", "Request", "solo_reference", "drain",
-           "main"]
+__all__ = ["Server", "ServePolicy", "Request", "serving_fns",
+           "solo_reference", "drain", "main"]
 
 # families whose serving cache supports the paged layout (token-prompt
 # attention models); recurrent families keep dense/recurrent state and
@@ -140,19 +146,37 @@ def _bucket(n: int, floor: int = 8) -> int:
     return b
 
 
+def serving_fns(cfg, *, donate: bool = False):
+    """The one place serving callables are built: a jitted
+    ``(prefill, decode)`` pair over ``lm.prefill_into`` /
+    ``lm.decode_step``, both taking ``(params, tokens, caches,
+    seq_lens)``.  The colocated :class:`Server`, the disaggregated
+    prefill/decode workers (``repro.launch.disagg``), and the
+    ``solo_reference`` oracle all compile *these* callables, so a
+    ``--check`` divergence can never be an artifact of the server and
+    the reference lowering different functions.  ``donate=True``
+    donates the cache argument (the servers' steady-state path); the
+    reference keeps its caches undonated so repeated checks can share
+    executables."""
+    kw: dict = {"donate_argnums": (2,)} if donate else {}
+    prefill = jax.jit(
+        lambda p, t, c, sl: lm.prefill_into(p, t, c, cfg, seq_lens=sl),
+        **kw)
+    decode = jax.jit(
+        lambda p, t, c, sl: lm.decode_step(p, t, c, cfg, seq_lens=sl),
+        **kw)
+    return prefill, decode
+
+
 _REF_FNS: dict = {}
 
 
 def _ref_fns(cfg):
-    """Per-config jitted (prefill, step) pair — cached so repeated
+    """Per-config cached :func:`serving_fns` pair — repeated
     ``solo_reference`` calls (--check over many requests) reuse the same
     executables instead of recompiling per call."""
     if cfg not in _REF_FNS:
-        _REF_FNS[cfg] = (
-            jax.jit(lambda p, t, c, sl: lm.prefill_into(p, t, c, cfg,
-                                                        seq_lens=sl)),
-            jax.jit(lambda p, t, c: lm.decode_step(p, t, c, cfg)),
-        )
+        _REF_FNS[cfg] = serving_fns(cfg)
     return _REF_FNS[cfg]
 
 
@@ -171,9 +195,10 @@ def solo_reference(cfg, params, prompt, max_new: int, max_len: int, *,
     logits, caches = prefill_fn(params, jnp.asarray(toks), caches,
                                 jnp.asarray([p], np.int32))
     out = [int(jnp.argmax(logits[0]))]
+    one = jnp.asarray([1], np.int32)
     while len(out) < max_new and (eos_id is None or out[-1] != eos_id):
         lg, caches = step(params, jnp.asarray([[out[-1]]], np.int32),
-                          caches)
+                          caches, one)
         out.append(int(jnp.argmax(lg[0, 0])))
     return out
 
@@ -320,13 +345,7 @@ class Server:
         self.slots: list[Request | None] = [None] * batch
         # pages referenced by each slot's table (paged mode bookkeeping)
         self.slot_pages: list[list[int] | None] = [None] * batch
-        self._decode = jax.jit(
-            lambda p, t, c, sl: lm.decode_step(p, t, c, cfg, seq_lens=sl),
-            donate_argnums=(2,))
-        self._prefill = jax.jit(
-            lambda p, t, c, sl: lm.prefill(p, {"tokens": t}, cfg,
-                                           caches=c, seq_lens=sl),
-            donate_argnums=(2,))
+        self._prefill, self._decode = serving_fns(cfg, donate=True)
         self._reset = jax.jit(
             lambda c, s: lm.reset_slot(c, s, cfg), donate_argnums=(0,))
         self._install = jax.jit(
@@ -370,18 +389,21 @@ class Server:
         self.slots_quarantined = 0
 
     # --------------------------------------------------- fault plumbing
-    def _submit(self, site: str, fn, *args):
+    def _submit(self, site: str, fn, *args, queue: DeviceQueue | None = None):
         """Queue submit under the retry policy: an injected (or any
         :class:`FaultError`) dispatch failure is retried up to
         ``max_retries`` times with exponential backoff.  Faults fire
         *before* the kernel runs, so device state is untouched and the
         identical submit is safe to replay.  Returns None once retries
         are exhausted — the caller routes the affected request(s) into
-        recovery."""
+        recovery.  ``queue`` overrides the default decode queue (the
+        disaggregated server routes prefills through its prefill
+        worker's own queue)."""
+        q = queue if queue is not None else self.queue
         delay = self.policy.backoff_s
         for attempt in range(self.policy.max_retries + 1):
             try:
-                return self.queue.submit(fn, *args, site=site)
+                return q.submit(fn, *args, site=site)
             except FaultError:
                 self.faults_detected += 1
                 self._tick_faults += 1
@@ -456,25 +478,13 @@ class Server:
             self.health, self._shed_reason = "healthy", ""
 
     # ------------------------------------------------------------- admit
-    def admit(self, req: Request) -> bool:
-        """Place ``req`` into a free slot.
-
-        Paged flow: match the prompt against the shard's prefix tree
-        (longest run of full cached pages, capped so at least the final
-        prompt token is left to prefill), retain the matched pages,
-        allocate private pages for the tail + generation (LRU-evicting
-        tree-only pages if the pool is dry), install the page table, and
-        prefill **only the unshared tail** in ONE batched dispatch (rows
-        of concurrent requests are masked by ``seq_lens``).  Afterwards
-        the prompt's full pages are inserted into the tree so the next
-        request can start from them.  Returns False when no slot is free
-        or the shard's pool cannot currently hold the request.
-
-        Returning True with ``req.done`` set means the request was
-        *consumed* without being served: shed (health state), rejected
-        (deferral cap / deadline expired while waiting), or finished at
-        admission (max_new == 1 / EOS).  ``req.finish_reason`` says
-        which."""
+    def _admission_gate(self, req: Request) -> bool:
+        """Pre-slot admission policy, shared by every server flavour:
+        capacity sanity (raises — an unservable request must fail loudly,
+        not defer forever), wall-clock deadline while waiting, the
+        deferral cap, and health-machine shedding.  Returns True when the
+        request was *consumed* by the gate (``req.done`` set with a
+        reason); False means proceed to slot placement."""
         need = len(req.prompt) + req.max_new - 1
         if need > self.max_len:
             raise ValueError(
@@ -504,6 +514,30 @@ class Server:
             req.finish_reason = f"shed:{self._shed_reason}"
             self.shed += 1
             return True
+        return False
+
+    def admit(self, req: Request) -> bool:
+        """Place ``req`` into a free slot.
+
+        Paged flow: match the prompt against the shard's prefix tree
+        (longest run of full cached pages, capped so at least the final
+        prompt token is left to prefill), retain the matched pages,
+        allocate private pages for the tail + generation (LRU-evicting
+        tree-only pages if the pool is dry), install the page table, and
+        prefill **only the unshared tail** in ONE batched dispatch (rows
+        of concurrent requests are masked by ``seq_lens``).  Afterwards
+        the prompt's full pages are inserted into the tree so the next
+        request can start from them.  Returns False when no slot is free
+        or the shard's pool cannot currently hold the request.
+
+        Returning True with ``req.done`` set means the request was
+        *consumed* without being served: shed (health state), rejected
+        (deferral cap / deadline expired while waiting), or finished at
+        admission (max_new == 1 / EOS).  ``req.finish_reason`` says
+        which."""
+        if self._admission_gate(req):
+            return True
+        need = len(req.prompt) + req.max_new - 1
         for i, s in enumerate(self.slots):
             if s is not None or self._is_quarantined(i):
                 continue
@@ -760,19 +794,42 @@ class Server:
         state machine is advanced from the tick's fault/deferral counts.
         """
         t0 = time.perf_counter()
+        self._tick_begin()
+        inflight = self._decode_dispatch()
+        if inflight:
+            self._decode_collect(inflight)
+            self.ticks += 1
+            dt = time.perf_counter() - t0
+            self.tick_wall_s.push(dt)
+            self.straggler.observe(self.clock, dt)
+        self._update_health()
+        return bool(inflight)
+
+    def _tick_begin(self):
+        """Advance the serving clock and run the per-tick control work:
+        expired pressure holds, pressure injection, recovery
+        re-admission, deadline enforcement."""
         self.clock += 1
         self._expire_pressure()
         self._inject_pressure()
         self._readmit_recoveries()
         self._deadline_sweep()
-        inflight: list[tuple[int, jax.Array]] = []
+
+    def _decode_dispatch(self) -> list[tuple[int, jax.Array, np.ndarray]]:
+        """Fire-and-forget one decode step per active shard; returns
+        ``(shard, logits, active_rows)`` futures for ``_decode_collect``.
+        ``active_rows`` pins which rows were actually fed this dispatch,
+        so requests that enter a slot *between* dispatch and collect
+        (the disaggregated server completes prefills in that window)
+        are not credited a token from a step they never rode."""
+        inflight: list[tuple[int, jax.Array, np.ndarray]] = []
         for shard in range(self.microbatches):
             toks = np.zeros((self.mb, 1), np.int32)
             sl = np.zeros((self.mb,), np.int32)
             for j in range(self.mb):
                 req = self.slots[shard * self.mb + j]
-                if req is None or req.done:
-                    continue
+                if req is None or req.done or not req.out:
+                    continue                 # empty out: prefill pending
                 toks[j] = req.out[-1]       # prefill seeded out[0]
                 sl[j] = 1
             if not sl.any():
@@ -787,33 +844,33 @@ class Server:
                 for j in range(self.mb):
                     i = shard * self.mb + j
                     req = self.slots[i]
-                    if req is not None and not req.done:
+                    if req is not None and not req.done and req.out:
                         self._recover(req, i, "decode_failed")
                 continue
             logits, self.caches[shard] = out
-            inflight.append((shard, logits))
-        if inflight:
-            for shard, logits in inflight:   # sync point: token readback
-                lg = logits[:, 0]
-                finite = np.asarray(jnp.isfinite(lg).all(axis=-1))
-                nxt = np.asarray(jnp.argmax(lg, axis=-1))
-                for j in range(self.mb):
-                    i = shard * self.mb + j
-                    req = self.slots[i]
-                    if req is None or req.done:
-                        continue
-                    if not finite[j]:
-                        # poisoned row: retire ONLY this slot — the
-                        # neighbours' logits and cache rows are intact
-                        self._recover(req, i, "nan_logits")
-                        continue
-                    self._append(req, i, int(nxt[j]))
-            self.ticks += 1
-            dt = time.perf_counter() - t0
-            self.tick_wall_s.push(dt)
-            self.straggler.observe(self.clock, dt)
-        self._update_health()
-        return bool(inflight)
+            inflight.append((shard, logits, sl > 0))
+        return inflight
+
+    def _decode_collect(self, inflight) -> None:
+        """Token readback — the tick's only sync point.  Poisoned
+        (non-finite) rows retire only their own slot."""
+        for shard, logits, active in inflight:
+            lg = logits[:, 0]
+            finite = np.asarray(jnp.isfinite(lg).all(axis=-1))
+            nxt = np.asarray(jnp.argmax(lg, axis=-1))
+            for j in range(self.mb):
+                if not active[j]:
+                    continue
+                i = shard * self.mb + j
+                req = self.slots[i]
+                if req is None or req.done:
+                    continue
+                if not finite[j]:
+                    # poisoned row: retire ONLY this slot — the
+                    # neighbours' logits and cache rows are intact
+                    self._recover(req, i, "nan_logits")
+                    continue
+                self._append(req, i, int(nxt[j]))
 
     # ------------------------------------------------------------ verify
     def verify(self):
@@ -924,6 +981,16 @@ def main(argv=None):
     ap.add_argument("--dense", action="store_true",
                     help="use the dense per-slot KV layout instead of the "
                          "paged pool (no prefix reuse)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode: prompts prefill on "
+                         "a dedicated worker (own pool + prefix tree) and "
+                         "their KV pages are handed off to the decode "
+                         "shards (repro.launch.disagg)")
+    ap.add_argument("--prefill-slots", type=int, default=2,
+                    help="concurrent in-flight prefills (--disagg only)")
+    ap.add_argument("--prefill-pool-pages", type=int, default=0,
+                    help="prefill-pool capacity (--disagg only; 0 = sized "
+                         "from --prefill-slots)")
     ap.add_argument("--page-size", type=int, default=0,
                     help="tokens per KV page (0 = config default or 8)")
     ap.add_argument("--pool-pages", type=int, default=0,
@@ -961,11 +1028,23 @@ def main(argv=None):
         policy.deadline_s = args.deadline_s
     if args.defer_cap is not None:
         policy.defer_cap = args.defer_cap
-    server = Server(cfg, params, batch=args.batch, max_len=max_len,
-                    microbatches=args.microbatches, eos_id=args.eos_id,
-                    paged=False if args.dense else None,
-                    page_size=args.page_size, pool_pages=args.pool_pages,
-                    verify=args.verify, policy=policy, inject=args.inject)
+    if args.disagg:
+        if args.dense:
+            ap.error("--disagg requires the paged KV cache (drop --dense)")
+        from repro.launch.disagg import DisaggServer
+        server = DisaggServer(
+            cfg, params, batch=args.batch, max_len=max_len,
+            microbatches=args.microbatches, eos_id=args.eos_id,
+            page_size=args.page_size, pool_pages=args.pool_pages,
+            prefill_slots=args.prefill_slots,
+            prefill_pool_pages=args.prefill_pool_pages,
+            verify=args.verify, policy=policy, inject=args.inject)
+    else:
+        server = Server(cfg, params, batch=args.batch, max_len=max_len,
+                        microbatches=args.microbatches, eos_id=args.eos_id,
+                        paged=False if args.dense else None,
+                        page_size=args.page_size, pool_pages=args.pool_pages,
+                        verify=args.verify, policy=policy, inject=args.inject)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size,
@@ -1003,9 +1082,15 @@ def main(argv=None):
         for r in done:      # every retirement carries an explicit reason
             assert r.finish_reason, f"request {r.rid} retired silently"
     if args.verify and server.paged:
-        n_ops = sum(len(p.trace or ()) for p in server.pools)
+        pools = list(server.pools)
+        if args.disagg:
+            pools.append(server.prefill.pool)
+        n_ops = sum(len(p.trace or ()) for p in pools)
+        extra = (f" + DSG handoff totality over "
+                 f"{len(server.ledger.events)} ledger event(s)"
+                 if args.disagg else "")
         print(f"verify: serving-invariant checker passed over {n_ops} "
-              f"traced pool operation(s)")
+              f"traced pool operation(s){extra}")
     if args.eos_id is None and not args.inject and args.deadline_s is None:
         assert all(len(r.out) == r.max_new for r in done)
     if args.check:

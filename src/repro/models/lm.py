@@ -29,7 +29,8 @@ from repro.models.common import apply_dense, apply_norm, embed_init, \
     make_positions, norm_init
 from repro.models.transformer import (
     AttnArgs, block_apply, block_init,
-    init_kv_cache, install_kv_pages, reset_kv_slot, stack_init,
+    init_kv_cache, install_kv_pages, migrate_kv_pages, reset_kv_slot,
+    stack_init,
 )
 
 __all__ = [
@@ -685,6 +686,37 @@ def install_pages(caches, slot, table_row, n_tokens, cfg: ArchConfig):
         return {"self": one(caches["self"]), "cross": caches["cross"]}
     raise ValueError(
         f"family {fam} has no paged attention cache to install into")
+
+
+def migrate_pages(src_caches, dst_caches, src_pages, dst_pages,
+                  cfg: ArchConfig):
+    """Copy KV page contents between two paged cache pytrees' pools.
+
+    The data plane of the disaggregated prefill->decode handoff: the
+    prefill worker's cache and a decode shard's cache are separate
+    pytrees over separate page id spaces, and this lands the prompt's
+    K/V bytes (``src_pages`` of the source pool) into the decode-side
+    pages (``dst_pages``) that ``repro.serving.handoff.transfer`` just
+    took custody of.  Page ids are layer-uniform, so the same index
+    vectors apply at every layer; batch widths and pool sizes may
+    differ between the two pytrees.  Returns the new destination pytree
+    — page tables/lengths untouched, the caller installs them via
+    :func:`install_pages` (a half-migrated slot is never addressable).
+    """
+    fam = cfg.family
+
+    def one(s, d):
+        return jax.vmap(migrate_kv_pages,
+                        in_axes=(0, 0, None, None))(
+            s, d, src_pages, dst_pages)
+
+    if fam in ("dense", "moe", "vlm"):
+        return {"self": one(src_caches["self"], dst_caches["self"])}
+    if fam == "audio":
+        return {"self": one(src_caches["self"], dst_caches["self"]),
+                "cross": dst_caches["cross"]}
+    raise ValueError(
+        f"family {fam} has no paged attention cache to migrate")
 
 
 def prefill_into(params, tokens, caches, cfg: ArchConfig, *, seq_lens=None):

@@ -198,6 +198,31 @@ def install_kv_pages(cache, slot, table_row, n_tokens):
             "len": cache["len"].at[slot].set(n_tokens)}
 
 
+def migrate_kv_pages(src_cache, dst_cache, src_pages, dst_pages):
+    """Copy page *contents* from one paged cache's pool into another's.
+
+    ``src_pages``/``dst_pages`` are equal-length int32 page-id vectors
+    into the source and destination pools (which may differ in
+    ``n_pages`` and batch width — only ``page_size``/heads/head-dim must
+    match).  This is the data plane of the prefill->decode handoff: the
+    host-side custody move is ``repro.serving.handoff.transfer``; this
+    gather/scatter lands the bytes.  Page tables and lengths are
+    untouched — the caller installs the destination table separately
+    (``install_kv_pages``), so a partially-migrated slot is never
+    addressable.
+
+    Index pairs may repeat (callers pad to a bucketed length by
+    repeating a real pair): the duplicate scatter writes carry identical
+    content, so last-write-wins is deterministic.
+    """
+    out = dict(dst_cache)
+    for key in ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages"):
+        if key in dst_cache:
+            out[key] = dst_cache[key].at[dst_pages].set(
+                src_cache[key][src_pages], mode="drop")
+    return out
+
+
 def _kv_quantize(x):
     """(B, 1, KV, hd) -> int8 values + per-head scale."""
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9

@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core.costmodel import TpuV5e
 
-__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes",
+__all__ = ["RooflineReport", "analyze_compiled", "arithmetic_intensity",
+           "classify_phase", "collective_bytes", "machine_balance",
            "parse_hlo_shapes"]
 
 _DTYPE_BYTES = {
@@ -59,6 +60,35 @@ def parse_hlo_shapes(type_str: str) -> int:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
     return total
+
+
+def arithmetic_intensity(n_ops: float, n_bytes: float) -> float:
+    """Operations per byte moved — the x-axis of every roofline plot.
+
+    Serving phases sit at opposite ends of this axis: batched prefill
+    re-uses each weight byte across the whole token block (high
+    intensity), while single-token decode touches every weight byte for
+    one MAC each (intensity ~1).  Placement uses this to route phases to
+    the datapath whose :func:`machine_balance` they sit on the right
+    side of.
+    """
+    return float(n_ops) / float(max(n_bytes, 1))
+
+
+def machine_balance(ops_per_cycle: float, bytes_per_cycle: float) -> float:
+    """A datapath's ridge point, in ops per byte.
+
+    Work with arithmetic intensity above the balance is compute-bound on
+    this datapath (its streamers keep up); below it, the ports are the
+    constraint and the datapath idles waiting for operands.
+    """
+    return float(ops_per_cycle) / float(max(bytes_per_cycle, 1e-9))
+
+
+def classify_phase(intensity: float, balance: float) -> str:
+    """``"compute"`` when work of this intensity saturates the datapath's
+    FLOPs, ``"bandwidth"`` when its streamer ports bound it instead."""
+    return "compute" if intensity >= balance else "bandwidth"
 
 
 def _group_size(line: str, default: int) -> int:

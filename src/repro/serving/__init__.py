@@ -8,14 +8,18 @@ here, on the host, in plain Python:
   * :class:`PagePool`   — refcounting allocator over a fixed page pool
     (one pool id space shared by every layer's pool array);
   * :class:`PrefixTree` — radix tree over full-page token runs mapping
-    prompt prefixes to page runs, with LRU leaf eviction.
+    prompt prefixes to page runs, with LRU leaf eviction;
+  * :func:`transfer` / :class:`HandoffLedger` — refcounted page-custody
+    moves between the disaggregated server's prefill pool and its
+    per-shard decode pools, journaled for the DSG handoff verifier.
 
 This mirrors the paper's loose-control / tight-data split: control
 decisions (admission, sharing, eviction) are cheap host-side bookkeeping,
 while the data plane stays a fixed set of device arrays addressed through
 small int32 tables.
 """
+from repro.serving.handoff import HandoffLedger, transfer
 from repro.serving.pages import PagePool
 from repro.serving.prefix_tree import PrefixTree
 
-__all__ = ["PagePool", "PrefixTree"]
+__all__ = ["HandoffLedger", "PagePool", "PrefixTree", "transfer"]

@@ -1,0 +1,123 @@
+"""KV page handoff between a prefill pool and a decode pool.
+
+The disaggregated server keeps two independent ``PagePool`` id spaces:
+the prefill worker writes prompt KV into *its* pool (where the prefix
+tree also lives), and each decode shard owns a separate pool that its
+page tables index.  A finished prefill therefore has to move page
+*ownership* across pools — the device-side copy is a separate jitted
+gather/scatter (``lm.migrate_pages``); this module is the host-side
+control plane that makes the move auditable:
+
+  * :func:`transfer` — the refcounted ownership move.  It stamps
+    owner-tagged ``transfer_out`` / ``transfer_in`` events into both
+    pools' traces, drops the prefill-side slot references (tree
+    references survive, so future prompts still match the cached
+    prefix), and hands back the decode-side page list.
+  * :class:`HandoffLedger` — an append-only event log of every page's
+    journey (``prefilled -> transferred/abandoned -> installed ->
+    retired``) that the ``DSG`` rule family in
+    ``repro.analysis.handoff`` replays to prove handoff totality: every
+    prefilled page reaches exactly one decode pool or is released, and
+    no decode page is owned by two requests at once.
+
+Pages are physical ids, so the same prefill-side page may legitimately
+appear in many requests' journeys (a shared prefix is transferred once
+per request, each time into freshly-owned decode pages); the ledger
+tracks per-request incarnations, not physical pages.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.serving.pages import PagePool
+
+__all__ = ["HandoffLedger", "transfer"]
+
+
+class HandoffLedger:
+    """Append-only journal of per-request KV page custody.
+
+    Event tuples (pages always sorted int tuples, ``rid`` the request id,
+    ``shard`` the decode shard index):
+
+      * ``("prefilled", rid, src_pages)`` — the prompt's pages in the
+        prefill pool, owned by the request's in-flight prefill;
+      * ``("transferred", rid, src_pages, shard, dst_pages)`` — custody
+        moved: prefill-side slot refs dropped, decode-side pages owned;
+      * ``("abandoned", rid, src_pages, reason)`` — prefill-side custody
+        released without a transfer (cancel, fault, deadline);
+      * ``("installed", rid, shard, dst_pages)`` — the decode shard's
+        page table now maps the request onto ``dst_pages``;
+      * ``("retired", rid, shard, dst_pages)`` — decode-side pages
+        released back to the shard pool (rid may be None when the slot
+        was already cleared at release time).
+    """
+
+    def __init__(self) -> None:
+        self.events: list[tuple] = []
+
+    @staticmethod
+    def _pages(pages: Sequence[int]) -> tuple[int, ...]:
+        return tuple(int(p) for p in pages)
+
+    def prefilled(self, rid: str, src_pages: Sequence[int]) -> None:
+        self.events.append(("prefilled", rid, self._pages(src_pages)))
+
+    def transferred(self, rid: str, src_pages: Sequence[int], shard: int,
+                    dst_pages: Sequence[int]) -> None:
+        self.events.append(("transferred", rid, self._pages(src_pages),
+                            int(shard), self._pages(dst_pages)))
+
+    def abandoned(self, rid: str, src_pages: Sequence[int],
+                  reason: str) -> None:
+        self.events.append(("abandoned", rid, self._pages(src_pages),
+                            reason))
+
+    def installed(self, rid: str, shard: int,
+                  dst_pages: Sequence[int]) -> None:
+        self.events.append(("installed", rid, int(shard),
+                            self._pages(dst_pages)))
+
+    def retired(self, rid: str | None, shard: int,
+                dst_pages: Sequence[int]) -> None:
+        self.events.append(("retired", rid, int(shard),
+                            self._pages(dst_pages)))
+
+
+def transfer(src_pool: PagePool, dst_pool: PagePool,
+             src_pages: Sequence[int], *, rid: str, shard: int = 0,
+             dst_pages: list[int] | None = None,
+             ledger: HandoffLedger | None = None) -> list[int] | None:
+    """Move page ownership from the prefill pool into a decode pool.
+
+    The caller must have already landed the KV *contents* in
+    ``dst_pages`` (or be about to — the device copy is ordered by data
+    dependency, custody by this call).  ``dst_pages`` may be
+    pre-allocated — the disaggregated server reserves decode pages at
+    admission so a finished prefill can never strand on a dry decode
+    pool — or None, in which case this allocates all-or-nothing from
+    ``dst_pool`` and returns None when it cannot (caller defers).
+
+    On success: both pools' traces carry matching owner-tagged
+    ``transfer_out``/``transfer_in`` events, the prefill-side *slot*
+    references are dropped (prefix-tree references survive, keeping the
+    cached prompt warm), the ledger records the move, and the decode
+    page list — one ref each, owned by the request's slot — is returned.
+    """
+    src_pages = [int(p) for p in src_pages]
+    if dst_pages is None:
+        dst_pages = dst_pool.alloc(len(src_pages))
+        if dst_pages is None:
+            return None
+    elif len(dst_pages) != len(src_pages):
+        raise ValueError(
+            f"transfer shape mismatch: {len(src_pages)} prefill pages "
+            f"into {len(dst_pages)} decode pages (rid={rid})")
+    src_pool.note("transfer_out", rid=rid, shard=shard,
+                  pages=tuple(src_pages))
+    dst_pool.note("transfer_in", rid=rid, shard=shard,
+                  pages=tuple(dst_pages))
+    src_pool.release(src_pages, owner="slot")
+    if ledger is not None:
+        ledger.transferred(rid, src_pages, shard, dst_pages)
+    return dst_pages

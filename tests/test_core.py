@@ -140,6 +140,91 @@ def test_placement_no_device_raises():
         place(g, cluster_6b())
 
 
+def _phase_rig():
+    """Two datapaths with IDENTICAL total node cycles (64) so only the
+    phase tie-break can separate them.  The node's arithmetic intensity
+    is exactly 8 ops/byte (98304 ops / 12288 bytes).
+
+      * ``balanced-dp``: 1536 ops/cyc over 3x512-bit ports -> machine
+        balance 8, so the node lands exactly compute-bound (matched);
+      * ``wide-dp``: 6144 ops/cyc over 6x512-bit ports (3 unused by this
+        node) -> balance 16, node is stream-bound there, but the summed
+        port bandwidth (384 B/cyc) is twice balanced-dp's.
+    """
+    from repro.core import AccelCost, AcceleratorSpec
+    fns = {"dense": lambda attrs, x, w: x}
+
+    def ports(n):
+        names = ("A", "B", "O", "P", "Q", "R")
+        adv = (("m", "k"), ("k", "n"), ("m", "n"))
+        return tuple(
+            Streamer(names[i], (8, 8), advance=adv[i % 3], elem_bits=8,
+                     port_bits=512)
+            for i in range(n))
+
+    balanced = AcceleratorSpec(
+        name="balanced-dp", kernels=("dense",), compute_fns=fns,
+        cost=AccelCost(ops_per_cycle=1536), streamers=ports(3))
+    wide = AcceleratorSpec(
+        name="wide-dp", kernels=("dense",), compute_fns=fns,
+        cost=AccelCost(ops_per_cycle=6144), streamers=ports(6))
+    g = Graph("g", {"x": TensorSpec((64, 64), "int8"),
+                    "w": TensorSpec((64, 64), "int8")},
+              [OpNode("fc", "dense", ("x", "w"),
+                      TensorSpec((64, 64), "int8"), {}, 98304)],
+              ("fc",))
+    return g, Cluster("rank", [wide, balanced], ClusterHw())
+
+
+def test_placement_phase_aware_prefill_vs_decode():
+    """With total cycles tied, phase picks the roofline-matched side:
+    prefill (compute) wants the datapath whose ports keep the node
+    compute-bound; decode (bandwidth) wants raw streaming bandwidth."""
+    g, c = _phase_rig()
+    assert place(g, c, phase="prefill")["fc"] == "balanced-dp"
+    assert place(g, c, phase="decode")["fc"] == "wide-dp"
+    # the serving aliases and the raw roofline names agree
+    assert place(g, c, phase="compute") == place(g, c, phase="prefill")
+    assert place(g, c, phase="bandwidth") == place(g, c, phase="decode")
+    # auto classifies the node itself (intensity 8 vs best balance 8 ->
+    # compute) and must agree with an explicit compute ranking
+    assert place(g, c, phase="auto") == place(g, c, phase="compute")
+
+
+def test_placement_tie_breaks_on_fewer_ports_consumed():
+    """Phase-less placement with total cycles tied must prefer the
+    candidate that ties up fewer streamer ports (wide-dp is listed
+    first, so declaration order can't explain the pick)."""
+    g, c = _phase_rig()
+    assert place(g, c)["fc"] == "balanced-dp"
+
+
+def test_placement_explain_returns_ranked_table():
+    g, c = _phase_rig()
+    placement, table = place(g, c, phase="decode", explain=True)
+    assert placement["fc"] == "wide-dp"
+    entry = table["fc"]
+    assert entry["intensity"] == 8.0
+    assert entry["phase"] == "bandwidth"       # alias resolved
+    rows = entry["candidates"]
+    assert [r["accel"] for r in rows][0] == "wide-dp"   # winner first
+    by_name = {r["accel"]: r for r in rows}
+    assert by_name["balanced-dp"]["cycles"] \
+        == by_name["wide-dp"]["cycles"] == 64
+    assert by_name["wide-dp"]["stream_bw"] \
+        == 2 * by_name["balanced-dp"]["stream_bw"]
+    assert by_name["balanced-dp"]["matched"] is True
+    assert by_name["wide-dp"]["matched"] is False
+    assert by_name["balanced-dp"]["ports"] == 3
+    assert by_name["wide-dp"]["ports"] == 6
+
+
+def test_placement_rejects_unknown_phase():
+    g, c = _phase_rig()
+    with pytest.raises(ValueError, match="phase"):
+        place(g, c, phase="training")
+
+
 # ------------------------------------------------------------ allocation ----
 def test_allocation_double_buffering_and_budget():
     g = tinyml_graph(batch=8)

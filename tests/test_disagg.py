@@ -1,0 +1,349 @@
+"""Disaggregated prefill/decode serving tests.
+
+The acceptance bar is unchanged from the colocated server — whatever the
+runtime does between two pools must be invisible in the tokens: every
+surviving request's greedy output is bit-identical to its dense-layout
+solo reference, now across a prefill pool, a device-to-device page
+migration, a refcounted custody transfer, and a decode-shard install.
+On top of that, the DSG rule family must prove the handoff protocol
+total over the recorded ledger, and seeded violations of each rule must
+be caught.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.analysis import check_handoff_trace
+from repro.configs.base import reduce
+from repro.launch.disagg import DisaggServer, _pad_pages
+from repro.launch.serve import (
+    Request, drain, solo_reference, SURVIVOR_REASONS,
+)
+from repro.models import lm
+from repro.serving import HandoffLedger, PagePool, PrefixTree, transfer
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduce(configs.get("smollm_135m"))
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mixed_traffic(cfg, n, *, shared_prefix=9, max_plen=14, gen=6,
+                   stagger=2, seed=0):
+    # shared_prefix spans a full page (page_size defaults to 8), so the
+    # prefill-side prefix tree can actually cache and serve it
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, shared_prefix).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(shared_prefix + 1, max_plen + 1))
+        tail = rng.integers(0, cfg.vocab_size,
+                            plen - shared_prefix).astype(np.int32)
+        reqs.append(Request(i, np.concatenate([shared, tail]), gen,
+                            arrival=i * stagger))
+    return reqs
+
+
+# ------------------------------------------------------------ transfer ----
+def test_transfer_moves_custody_and_tree_refs_survive():
+    """transfer() drops the prefill-side *slot* references but leaves
+    tree retentions intact, stamps matching owner-tagged trace events in
+    both pools, and journals the move."""
+    src = PagePool(8, 4, record=True)
+    dst = PagePool(8, 4, record=True)
+    ledger = HandoffLedger()
+    pages = src.alloc(3)
+    src.retain(pages[:2], owner="tree")       # shared prefix retained
+    reserved = dst.alloc(3)
+    out = transfer(src, dst, pages, rid=7, shard=1, dst_pages=reserved,
+                   ledger=ledger)
+    assert out == reserved
+    # slot refs dropped; the two tree-retained pages survive at ref 1
+    assert [int(src.refs[p]) for p in pages] == [1, 1, 0]
+    assert src.used_pages == 2
+    assert all(int(dst.refs[p]) == 1 for p in reserved)
+    assert ("event", "transfer_out",
+            (("pages", tuple(pages)), ("rid", 7), ("shard", 1))) \
+        in src.trace
+    assert ("event", "transfer_in",
+            (("pages", tuple(reserved)), ("rid", 7), ("shard", 1))) \
+        in dst.trace
+    assert ledger.events == [
+        ("transferred", 7, tuple(pages), 1, tuple(reserved))]
+
+
+def test_transfer_allocates_when_unreserved_and_defers_when_dry():
+    src = PagePool(8, 4)
+    dst = PagePool(2, 4)
+    a = src.alloc(2)
+    assert transfer(src, dst, a, rid=0) == [0, 1]   # fresh dst alloc
+    b = src.alloc(2)
+    assert transfer(src, dst, b, rid=1) is None     # dst dry: caller defers
+    assert [int(src.refs[p]) for p in b] == [1, 1]  # custody NOT dropped
+
+
+def test_transfer_shape_mismatch_raises():
+    src, dst = PagePool(4, 4), PagePool(4, 4)
+    pages = src.alloc(2)
+    with pytest.raises(ValueError, match="mismatch"):
+        transfer(src, dst, pages, rid=0, dst_pages=dst.alloc(1))
+
+
+def test_pad_pages_repeats_real_pair_to_bucket():
+    s, d = _pad_pages([3, 5, 9], [1, 2, 4])
+    assert list(np.asarray(s)) == [3, 5, 9, 3]
+    assert list(np.asarray(d)) == [1, 2, 4, 1]
+
+
+# ------------------------------------------------------------ DSG rules ----
+def _clean_journey(rid=0, shard=0):
+    return [
+        ("prefilled", rid, (0, 1)),
+        ("transferred", rid, (0, 1), shard, (4, 5)),
+        ("installed", rid, shard, (4, 5, 6)),   # 6 = generation page
+        ("retired", rid, shard, (4, 5, 6)),
+    ]
+
+
+def test_dsg_clean_journey_passes():
+    assert check_handoff_trace(_clean_journey()) == []
+
+
+def test_dsg000_malformed_events():
+    diags = check_handoff_trace([
+        ("teleported", 0, (1,)),
+        ("prefilled", 0, (0, 1)),
+        ("transferred", 0, (0, 1), 0, (4,)),    # 2 src -> 1 dst
+    ])
+    assert [d.rule for d in diags if d.rule == "DSG000"] \
+        == ["DSG000", "DSG000"]
+
+
+def test_dsg001_stranded_prefill_and_live_exemption():
+    ev = [("prefilled", 0, (0, 1))]             # never settled
+    assert {d.rule for d in check_handoff_trace(ev)} == {"DSG001"}
+    # ... unless the request is still mid-flight at verify time
+    assert check_handoff_trace(ev, live_rids=[0]) == []
+    # re-prefill while the previous incarnation still holds pages is
+    # flagged even for live requests (only the LAST incarnation is open)
+    ev = [("prefilled", 0, (0, 1)), ("prefilled", 0, (2,))]
+    assert "DSG001" in {d.rule for d in
+                        check_handoff_trace(ev, live_rids=[0])}
+
+
+def test_dsg002_double_handoff():
+    ev = [
+        ("prefilled", 0, (0, 1)),
+        ("transferred", 0, (0, 1), 0, (4, 5)),
+        ("transferred", 0, (1,), 1, (2,)),      # page 1 handed off twice
+        ("installed", 0, 0, (4, 5)),
+        ("installed", 0, 1, (2,)),
+    ]
+    assert "DSG002" in {d.rule for d in check_handoff_trace(ev)}
+
+
+def test_dsg003_custody_moved_without_prefill():
+    ev = [("transferred", 9, (0,), 0, (1,))]
+    assert "DSG003" in {d.rule for d in check_handoff_trace(ev)}
+    ev = [("installed", 9, 0, (1,))]
+    assert "DSG003" in {d.rule for d in check_handoff_trace(ev)}
+
+
+def test_dsg004_migrated_but_never_installed():
+    ev = [
+        ("prefilled", 0, (0, 1)),
+        ("transferred", 0, (0, 1), 0, (4, 5)),
+        ("installed", 0, 0, (4,)),              # page 5 unreachable
+    ]
+    assert "DSG004" in {d.rule for d in check_handoff_trace(ev)}
+
+
+def test_dsg005_cross_pool_double_ownership_and_bad_retire():
+    ev = _clean_journey(rid=0)[:3] + [
+        ("prefilled", 1, (2,)),
+        ("transferred", 1, (2,), 0, (4,)),      # page 4 owned by rid 0
+    ]
+    assert "DSG005" in {d.rule for d in check_handoff_trace(ev)}
+    ev = [("retired", 0, 0, (9,))]              # never owned
+    assert "DSG005" in {d.rule for d in check_handoff_trace(ev)}
+
+
+def test_dsg_abandoned_settles_custody():
+    ev = [("prefilled", 0, (0, 1)),
+          ("abandoned", 0, (0, 1), "cancelled")]
+    assert check_handoff_trace(ev) == []
+
+
+# ----------------------------------------------------------- end to end ----
+@pytest.mark.parametrize("microbatches", [1, 2])
+def test_disagg_bit_identical_mixed_traffic(smollm, microbatches):
+    """Staggered, ragged, prefix-sharing traffic through the two-pool
+    runtime: every request decodes bit-identically to its dense solo
+    reference, pages actually moved between pools, and the SRV + DSG
+    checkers pass at drain (verify=True re-verifies inside drain())."""
+    cfg, params = smollm
+    gen = 6
+    max_len = 14 + gen + 2
+    srv = DisaggServer(cfg, params, batch=4, max_len=max_len,
+                       microbatches=microbatches, prefill_slots=2,
+                       verify=True)
+    done = drain(srv, _mixed_traffic(cfg, 8), max_iters=500)
+    assert len(done) == 8
+    for r in done:
+        assert r.finish_reason == "length"
+        ref = solo_reference(cfg, params, r.prompt, r.max_new, max_len)
+        assert r.out == ref, (r.rid, r.out, ref)
+    st = srv.stats()
+    assert st["disaggregated"] and st["transfers"] == 8
+    assert st["pages_transferred"] > 0 and st["prefix_hits"] > 0
+    # every decode tick that also completed a prefill is real overlap
+    assert st["overlap_ticks"] > 0
+    # all custody settled: decode pools empty, prefill pool holds only
+    # tree-cached pages at refcount exactly 1
+    assert all(p.used_pages == 0 for p in srv.pools)
+    pf = srv.prefill.pool
+    assert pf.used_pages == srv.prefill.tree.nodes
+    assert (pf.refs[pf.refs > 0] == 1).all()
+
+
+def test_disagg_cancel_mid_prefill_and_mid_decode(smollm):
+    """Cancel in both custody windows: while the prefill is pending (the
+    reserved decode pages must come back, journaled as abandoned) and
+    while decoding (the installed pages retire).  Verify stays clean."""
+    cfg, params = smollm
+    rng = np.random.default_rng(3)
+    srv = DisaggServer(cfg, params, batch=4, max_len=20, microbatches=2,
+                       prefill_slots=2, verify=True)
+    a = Request(0, rng.integers(0, cfg.vocab_size, 10).astype(np.int32), 6)
+    b = Request(1, rng.integers(0, cfg.vocab_size, 10).astype(np.int32), 6)
+    assert srv.admit(a) and srv.admit(b)
+    held = srv.cancel(a)                       # still pending: no tick yet
+    assert a.finish_reason == "cancelled" and held
+    assert not any(srv.pools[s].refs[p]
+                   for s, p in [(0, pg) for pg in held])
+    assert any(e[0] == "abandoned" and e[1] == 0 and e[3] == "cancelled"
+               for e in srv.ledger.events)
+    srv.tick(); srv.tick()
+    assert len(b.out) >= 1                     # b decoding normally
+    held = srv.cancel(b)
+    assert b.finish_reason == "cancelled" and held
+    srv.quiesce()
+    srv.verify()                               # SRV + DSG clean
+    assert all(p.used_pages == 0 for p in srv.pools)
+
+
+def test_disagg_chaos_survivors_bit_identical(smollm):
+    """Seeded fault injection over both queues (prefill worker included):
+    recoveries re-prefill through the prefill pool, survivors stay
+    bit-identical, the ledger replays clean, and every retirement
+    carries an explicit reason."""
+    cfg, params = smollm
+    gen = 6
+    max_len = 12 + gen + 2
+    srv = DisaggServer(
+        cfg, params, batch=4, max_len=max_len, microbatches=2,
+        prefill_slots=2, verify=True,
+        inject="seed=3,raise:0.05,drop:0.05,nan:0.05,"
+               "stall:0.03:delay_s=0.001,pressure:0.08:pages=2")
+    done = drain(srv, _mixed_traffic(cfg, 12, stagger=1, seed=1),
+                 max_iters=800)
+    assert sum(srv.inject.injected.values()) > 0
+    survivors = [r for r in done if r.finish_reason in SURVIVOR_REASONS]
+    assert survivors
+    for r in done:
+        assert r.finish_reason          # nothing retires silently
+    for r in survivors:
+        ref = solo_reference(cfg, params, r.prompt, r.max_new, max_len)
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_disagg_recovery_reprefills_on_prefill_pool(smollm):
+    """A NaN-poisoned decode row routes through quarantine and
+    re-admission — and the re-prefill runs on the *prefill* worker's
+    queue, opening a second ledger incarnation for the request."""
+    cfg, params = smollm
+    srv = DisaggServer(cfg, params, batch=2, max_len=20,
+                       prefill_slots=2, verify=True,
+                       inject="seed=5,nan:0.15")
+    done = drain(srv, _mixed_traffic(cfg, 6, stagger=1, seed=2),
+                 max_iters=800)
+    assert srv.recoveries >= 1
+    # at least one rid was prefilled more than once (the re-prefill)
+    prefills: dict = {}
+    for ev in srv.ledger.events:
+        if ev[0] == "prefilled":
+            prefills[ev[1]] = prefills.get(ev[1], 0) + 1
+    assert max(prefills.values()) >= 2
+    # and every prefill (install + dispatch, re-prefills included) went
+    # through the prefill worker's queue, never the decode queue
+    assert srv.prefill.queue.dispatched == 2 * srv.admitted
+    for r in done:
+        if r.finish_reason in SURVIVOR_REASONS:
+            ref = solo_reference(cfg, params, r.prompt, r.max_new, 20)
+            assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_disagg_gateway_end_to_end(smollm):
+    """The gateway drives the disaggregated server through the same
+    narrow API: admission classes, streaming, cancels, usage accounting,
+    bit-identity, and GWY + SRV + DSG verification all hold."""
+    from repro.gateway.loadgen import run_loadgen
+    cfg, params = smollm
+    srv = DisaggServer(cfg, params, batch=4, max_len=16 + 16 + 8,
+                       microbatches=2, prefill_slots=2, verify=True)
+    gw, point = run_loadgen(srv, requests=24, arrival="bursty",
+                            pool=8, prompt_len=16, shared_prefix=9,
+                            cancel_rate=0.05, seed=0, check=True,
+                            verbose=False)
+    assert point["requests"] == 24
+    assert len(gw.responses) + len(gw.rejections) == 24
+    gw.verify()                        # GWY + SRV + DSG merged report
+    assert gw.unaccounted() == []
+
+
+def test_disagg_two_pool_interleaving_never_leaks(smollm):
+    """Deterministic seeded interleavings of admit / tick / cancel
+    churn: after every drain the decode pools are empty, the
+    prefill pool holds exactly the tree's retained pages, and the DSG +
+    SRV checkers pass.  (The hypothesis twin of this test lives in
+    test_property.py; this one always runs.)"""
+    cfg, params = smollm
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        srv = DisaggServer(cfg, params, batch=4, max_len=14,
+                           microbatches=2, prefill_slots=2, verify=True)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(2, 8))
+                                        ).astype(np.int32),
+                        int(rng.integers(1, 5)))
+                for i in range(6)]
+        queued = list(reqs)
+        live = []
+        for step in range(200):
+            if not queued and all(r.done for r in reqs):
+                break
+            if queued and rng.random() < 0.6 and srv.admit(queued[0]):
+                live.append(queued.pop(0))
+            if live and rng.random() < 0.2:
+                srv.cancel(live[int(rng.integers(len(live)))])
+            srv.tick()
+        else:
+            pytest.fail(f"seed {seed}: did not converge")
+        srv.quiesce()
+        srv.verify()
+        assert all(p.used_pages == 0 for p in srv.pools), seed
+        pf = srv.prefill.pool
+        assert pf.used_pages == srv.prefill.tree.nodes, seed
+        assert (pf.refs[pf.refs > 0] == 1).all(), seed
+
+
+def test_disagg_rejects_dense_and_bad_slots(smollm):
+    cfg, params = smollm
+    with pytest.raises(ValueError, match="paged"):
+        DisaggServer(cfg, params, batch=2, max_len=16, paged=False)
+    with pytest.raises(ValueError, match="prefill_slots"):
+        DisaggServer(cfg, params, batch=2, max_len=16, prefill_slots=0)

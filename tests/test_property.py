@@ -280,3 +280,103 @@ def test_page_pool_prefix_tree_churn_refcount_discipline(data):
     assert (pool.refs[pool.refs > 0] == 1).all()
     tree.evict(tree.nodes)
     assert pool.used_pages == 0 and pool.free_pages == pool.n_pages
+
+
+# ----------------------------------------------------- disagg handoff ----
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_disagg_two_pool_handoff_custody_discipline(data):
+    """Random interleavings of prefill-pool admission, custody transfer()
+    into two decode pools, decode-side release, and mid-flight cancel
+    (the disaggregated server's control plane, minus the model): no pool
+    ever leaks or double-frees a page, the handoff ledger replays clean
+    through the DSG rules at every quiescent point, and full cleanup
+    leaves only tree-cached prefill pages behind."""
+    from repro.analysis import check_handoff_trace
+    from repro.analysis.serving import verify_pool
+    from repro.serving import HandoffLedger, PagePool, PrefixTree, transfer
+
+    P = 4
+    pf = PagePool(12, P, record=True)
+    tree = PrefixTree(pf)
+    dpools = [PagePool(12, P, record=True) for _ in range(2)]
+    ledger = HandoffLedger()
+    pending: dict = {}     # rid -> (prompt, pf_table, shard, dst_pages)
+    decoding: dict = {}    # rid -> (shard, dst_pages)
+    rid = 0
+    for _ in range(data.draw(st.integers(5, 40), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "land", "cancel_pending", "retire"]), label="op")
+        if op == "admit":
+            prompt = np.asarray(data.draw(
+                st.lists(st.integers(0, 2), min_size=2, max_size=10),
+                label="prompt"), np.int32)
+            shard = data.draw(st.integers(0, 1), label="shard")
+            gen = data.draw(st.integers(1, 4), label="gen")
+            shared, shared_len = tree.match(prompt)
+            n_src = -(-len(prompt) // P)
+            n_dst = -(-(len(prompt) + gen - 1) // P)
+            n_priv = n_src - len(shared)
+            if pf.free_pages < n_priv:
+                tree.evict(n_priv - pf.free_pages)
+            priv = pf.alloc(n_priv)
+            if priv is None:
+                pf.release(shared)             # prefill pool dry: defer
+                continue
+            dst = dpools[shard].alloc(n_dst)
+            if dst is None:
+                pf.release(shared + priv)      # decode pool dry: defer
+                continue
+            table = shared + priv
+            ledger.prefilled(rid, table)
+            pending[rid] = (prompt, table, shard, dst)
+            rid += 1
+        elif op == "land" and pending:
+            r = data.draw(st.sampled_from(sorted(pending)), label="land")
+            prompt, table, shard, dst = pending.pop(r)
+            tree.insert(prompt, table)         # certified prompt pages
+            out = transfer(pf, dpools[shard], table, rid=r, shard=shard,
+                           dst_pages=dst[:len(table)], ledger=ledger)
+            assert out == dst[:len(table)]
+            ledger.installed(r, shard, dst)
+            decoding[r] = (shard, dst)
+        elif op == "cancel_pending" and pending:
+            r = data.draw(st.sampled_from(sorted(pending)),
+                          label="cancel")
+            _, table, shard, dst = pending.pop(r)
+            ledger.abandoned(r, table, "cancelled")
+            pf.release(table)
+            dpools[shard].release(dst)
+        elif op == "retire" and decoding:
+            r = data.draw(st.sampled_from(sorted(decoding)),
+                          label="retire")
+            shard, dst = decoding.pop(r)
+            ledger.retired(r, shard, dst)
+            dpools[shard].release(dst)
+        # standing invariants after EVERY operation, all three pools
+        for pool in [pf] + dpools:
+            assert (pool.refs >= 0).all()
+            assert pool.free_pages + pool.used_pages == pool.n_pages
+        assert check_handoff_trace(
+            ledger.events, live_rids=sorted(pending)) == []
+    # quiescent verification against current holders
+    assert verify_pool(
+        pf, tree,
+        live_slot_pages=[t for _, t, _, _ in pending.values()]) == []
+    for s, pool in enumerate(dpools):
+        live = [d for _, _, sh, d in pending.values() if sh == s]
+        live += [d for sh, d in decoding.values() if sh == s]
+        assert verify_pool(pool, None, live_slot_pages=live) == []
+    # drain everything: cancel the pendings, retire the decoders
+    for r, (_, table, shard, dst) in list(pending.items()):
+        ledger.abandoned(r, table, "cancelled")
+        pf.release(table)
+        dpools[shard].release(dst)
+    for r, (shard, dst) in list(decoding.items()):
+        ledger.retired(r, shard, dst)
+        dpools[shard].release(dst)
+    assert check_handoff_trace(ledger.events) == []
+    # only tree-cached prefill pages remain, each at refcount exactly 1
+    assert pf.used_pages == tree.nodes
+    assert (pf.refs[pf.refs > 0] == 1).all()
+    assert all(p.used_pages == 0 for p in dpools)
